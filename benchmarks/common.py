@@ -1,0 +1,20 @@
+"""Shared helpers for the benchmark suite."""
+from __future__ import annotations
+
+import sys
+
+
+def emit(rows, header=None, file=sys.stdout):
+    """Print rows (list of dicts) as CSV."""
+    if not rows:
+        return
+    cols = header or list(rows[0].keys())
+    print(",".join(cols), file=file)
+    for r in rows:
+        print(",".join(_fmt(r.get(c, "")) for c in cols), file=file)
+
+
+def _fmt(v):
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)

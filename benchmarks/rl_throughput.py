@@ -1,0 +1,87 @@
+"""Paper Tables 3/4 + Figure 9: RL (GRPO on AIME) training throughput.
+
+Methods: Collective Native (verl's two-level partitioning, Listing 2),
+Collective LB-Micro, ODC LB-Micro, ODC LB-Mini.  The verl-optimized
+ordering (Listing 3) is what our lb_micro applies per minibatch.
+
+Validation targets (paper):
+  * LB-Micro substantially faster than Native;
+  * ODC adds a further (smaller than SFT) gain, ~5-10%;
+  * gains shrink as minibs grows.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.balance import STRATEGIES, verl_native
+from repro.data import sample_lengths
+from repro.sim import simulate_minibatch
+
+WORLD = 8
+MAX_TOKENS = 16_384
+
+
+def run(minibs=(2, 4, 8, 16), world=WORLD, max_tokens=MAX_TOKENS, seeds=8):
+    rows = []
+    for mb in minibs:
+        per = {}
+        # Native: plans over the whole PPO batch (4 minibatches worth)
+        sps_n = []
+        for s in range(seeds):
+            lens = sample_lengths("aime", world * mb * 4, s).tolist()
+            lens = [min(l, max_tokens) for l in lens]
+            plans = verl_native(lens, world, max_tokens, minibatch_size=mb)
+            total_t = sum(
+                simulate_minibatch(p, lens, scheme="collective").makespan
+                for p in plans)
+            sps_n.append(len(lens) / total_t)
+        per[("native", "collective")] = float(np.mean(sps_n))
+
+        for strat in ("lb_micro", "lb_mini"):
+            for scheme in ("collective", "odc"):
+                if strat == "lb_mini" and scheme == "collective":
+                    continue
+                sps = []
+                for s in range(seeds):
+                    lens = sample_lengths("aime", world * mb, s).tolist()
+                    lens = [min(l, max_tokens) for l in lens]
+                    plan = STRATEGIES[strat](lens, world, max_tokens)
+                    r = simulate_minibatch(plan, lens, scheme=scheme)
+                    sps.append(len(lens) / r.makespan)
+                per[(strat, scheme)] = float(np.mean(sps))
+
+        base = per[("lb_micro", "collective")]
+        for (strat, scheme), sps in per.items():
+            rows.append({
+                "dataset": "aime", "minibs": mb, "strategy": strat,
+                "scheme": scheme, "samples_per_s": sps,
+                "speedup_vs_lbmicro_coll_pct": 100 * (sps / base - 1),
+            })
+    return rows
+
+
+def validate(rows):
+    msgs = []
+    by = {(r["minibs"], r["strategy"], r["scheme"]): r for r in rows}
+    for mb in sorted({r["minibs"] for r in rows}):
+        native = by[(mb, "native", "collective")]["samples_per_s"]
+        micro = by[(mb, "lb_micro", "collective")]["samples_per_s"]
+        if micro < native:
+            msgs.append(f"minibs={mb}: LB-Micro not faster than Native")
+        odc = by[(mb, "lb_mini", "odc")]["samples_per_s"]
+        if odc < 0.99 * micro:
+            msgs.append(f"minibs={mb}: ODC LB-Mini slower than baseline")
+    return msgs
+
+
+def main():
+    from benchmarks.common import emit
+    rows = run()
+    emit(rows)
+    msgs = validate(rows)
+    print("# validation:", "OK" if not msgs else "; ".join(msgs))
+    return 0 if not msgs else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

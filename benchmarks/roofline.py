@@ -1,0 +1,81 @@
+"""Roofline report: reads the dry-run JSON records (launch/dryrun.py) and
+prints the per-(arch × shape × mesh) roofline table for EXPERIMENTS.md.
+
+Run the sweeps first:
+  python -m repro.launch.dryrun --all --out results/dryrun/singlepod_baseline.json
+  python -m repro.launch.dryrun --all --multi-pod --out results/dryrun/multipod_baseline.json
+"""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load(name):
+    path = os.path.join(RESULTS, name)
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        data = json.load(f)
+    return data if isinstance(data, list) else [data]
+
+
+def rows_from(records, mesh_tag):
+    rows = []
+    for r in records:
+        if r.get("status") == "skipped":
+            rows.append({"mesh": mesh_tag, "arch": r["arch"],
+                         "shape": r["shape"], "status": "skipped"})
+            continue
+        if r.get("status") != "ok":
+            rows.append({"mesh": mesh_tag, "arch": r["arch"],
+                         "shape": r["shape"], "status": "error"})
+            continue
+        ro = r["roofline"]
+        rows.append({
+            "mesh": mesh_tag, "arch": r["arch"], "shape": r["shape"],
+            "status": "ok",
+            "compute_s": ro["compute_s"], "memory_s": ro["memory_s"],
+            "collective_s": ro["collective_s"], "dominant": ro["dominant"],
+            "useful_flop_ratio": ro.get("useful_flop_ratio", ""),
+            "temp_GB": r["memory"]["temp_bytes"] / 1e9,
+            "compile_s": r["compile_s"],
+        })
+    return rows
+
+
+def run():
+    rows = []
+    rows += rows_from(load("singlepod_baseline.json"), "16x16")
+    rows += rows_from(load("multipod_baseline.json"), "2x16x16")
+    rows += rows_from(load("singlepod_optimized.json"), "16x16-opt")
+    rows += rows_from(load("multipod_hybrid_optimized.json"),
+                      "2x16x16-hybrid-opt")
+    return rows
+
+
+def validate(rows):
+    msgs = []
+    if not rows:
+        return ["no dry-run records found — run repro.launch.dryrun first"]
+    bad = [r for r in rows if r["status"] == "error"]
+    if bad:
+        msgs.append(f"{len(bad)} combos failed to lower/compile")
+    return msgs
+
+
+def main():
+    from benchmarks.common import emit
+    rows = run()
+    emit(rows, header=["mesh", "arch", "shape", "status", "dominant",
+                       "compute_s", "memory_s", "collective_s",
+                       "useful_flop_ratio", "temp_GB", "compile_s"])
+    msgs = validate(rows)
+    print("# validation:", "OK" if not msgs else "; ".join(msgs))
+    return 0 if not msgs else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

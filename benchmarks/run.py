@@ -1,0 +1,60 @@
+"""Benchmark driver: one module per paper table/figure.
+
+  sft_throughput   Tables 5/6, Fig. 8   SFT samples/s + bubble rate
+  rl_throughput    Tables 3/4, Fig. 9   RL (GRPO/AIME) samples/s
+  parametric       Fig. 10              acceleration-ratio factor sweeps
+  primitives       Fig. 11, Table 2     comm primitive bandwidth + volumes
+  hybrid_sharding  Appendix E           ZeRO++-style hybrid sharding
+  convergence      Fig. 14              loss-curve equivalence
+  straggler        (ours, §6.2)         heterogeneity + bounded staleness
+  roofline         (ours)               dry-run roofline table
+
+``python -m benchmarks.run [module ...]`` — no args runs everything.
+"""
+from __future__ import annotations
+
+import importlib
+import os
+import sys
+import time
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+ALL = [
+    "sft_throughput",
+    "rl_throughput",
+    "parametric",
+    "primitives",
+    "hybrid_sharding",
+    "convergence",
+    "straggler",
+    "roofline",
+]
+
+
+def main(argv=None):
+    names = (argv if argv is not None else sys.argv[1:]) or ALL
+    failures = []
+    for name in names:
+        mod = importlib.import_module(f"benchmarks.{name}")
+        print(f"\n===== benchmarks.{name} =====", flush=True)
+        t0 = time.time()
+        try:
+            rc = mod.main()
+        except Exception:  # noqa: BLE001
+            import traceback
+            traceback.print_exc()
+            rc = 1
+        dt = time.time() - t0
+        status = "OK" if rc == 0 else "FAIL"
+        print(f"===== {name}: {status} ({dt:.1f}s) =====", flush=True)
+        if rc != 0:
+            failures.append(name)
+    print(f"\n{len(names) - len(failures)}/{len(names)} benchmarks OK"
+          + (f"; failed: {failures}" if failures else ""))
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

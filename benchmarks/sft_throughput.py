@@ -1,0 +1,93 @@
+"""Paper Tables 5/6 + Figure 8: SFT throughput and bubble rate.
+
+Simulated timing (repro.sim models the device asynchrony that BSP/SPMD
+cannot exhibit on one host — see DESIGN.md §8.2) across
+(dataset × minibatch-size × method), methods = {Collective, ODC} ×
+{LocalSort, LB-Micro, LB-Mini}.
+
+Validation targets (paper):
+  * all methods tie at minibs=1;
+  * ODC ≥ Collective everywhere, with the gap growing with minibs;
+  * LB-Mini(ODC) is the best packed method, up to ~36% over
+    Collective LB-Micro, with near-zero bubble at large minibs.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.balance import STRATEGIES
+from repro.data import sample_lengths
+from repro.sim import SimConfig, simulate_minibatch
+
+SEEDS = 10
+WORLD = 8
+MAX_TOKENS = 65_536
+
+
+def run(datasets=("longalign", "swesmith"), minibs=(1, 2, 4, 8),
+        world=WORLD, max_tokens=MAX_TOKENS, seeds=SEEDS):
+    rows = []
+    for ds in datasets:
+        for mb in minibs:
+            per = {}
+            for strat in ("local_sort", "lb_micro", "lb_mini"):
+                for scheme in ("collective", "odc"):
+                    if strat == "lb_mini" and scheme == "collective":
+                        continue  # unequal microbatch counts need ODC
+                    sps, br = [], []
+                    for s in range(seeds):
+                        lens = sample_lengths(ds, world * mb, s).tolist()
+                        lens = [min(l, max_tokens) for l in lens]
+                        plan = STRATEGIES[strat](lens, world, max_tokens)
+                        r = simulate_minibatch(plan, lens, scheme=scheme)
+                        sps.append(len(lens) / r.makespan)
+                        br.append(r.bubble_rate)
+                    per[(strat, scheme)] = (float(np.mean(sps)),
+                                            float(np.mean(br)))
+            base = per[("lb_micro", "collective")][0]
+            base_sort = per[("local_sort", "collective")][0]
+            for (strat, scheme), (sps, br) in per.items():
+                ref = base_sort if strat == "local_sort" else base
+                rows.append({
+                    "dataset": ds, "minibs": mb, "strategy": strat,
+                    "scheme": scheme, "samples_per_s": sps,
+                    "bubble_pct": 100 * br,
+                    "speedup_vs_collective_pct": 100 * (sps / ref - 1),
+                })
+    return rows
+
+
+def validate(rows):
+    """Check the paper's qualitative claims hold."""
+    msgs = []
+    by = {(r["dataset"], r["minibs"], r["strategy"], r["scheme"]): r
+          for r in rows}
+    for ds in {r["dataset"] for r in rows}:
+        # minibs=1: everything ties (±2%)
+        vals = [r["samples_per_s"] for r in rows
+                if r["dataset"] == ds and r["minibs"] == 1]
+        if max(vals) / min(vals) > 1.02:
+            msgs.append(f"{ds}: methods do not tie at minibs=1")
+        # ODC LB-Mini >= Collective LB-Micro at largest minibs, by >=5%
+        big = max(r["minibs"] for r in rows)
+        odc = by[(ds, big, "lb_mini", "odc")]["samples_per_s"]
+        col = by[(ds, big, "lb_micro", "collective")]["samples_per_s"]
+        if odc < 1.05 * col:
+            msgs.append(f"{ds}: ODC LB-Mini gain at minibs={big} < 5%")
+        # bubble near zero for ODC LB-Mini at largest minibs
+        if by[(ds, big, "lb_mini", "odc")]["bubble_pct"] > 15:
+            msgs.append(f"{ds}: ODC LB-Mini bubble too high at minibs={big}")
+    return msgs
+
+
+def main():
+    from benchmarks.common import emit
+    rows = run()
+    emit(rows)
+    msgs = validate(rows)
+    print("# validation:", "OK" if not msgs else "; ".join(msgs))
+    return 0 if not msgs else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,75 @@
+"""Quickstart: the ODC idea in ~60 lines of public API.
+
+1. build a reduced model from the architecture registry;
+2. balance one imbalanced minibatch with LB-Mini (paper §4);
+3. run one FSDP train step with the collective baseline and one with ODC
+   (p2p comm, minibatch-level sync) — identical numerics;
+4. show the communication-schedule difference in the lowered HLO.
+
+Run:  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import jax
+
+from repro.balance import lb_mini
+from repro.configs import get_reduced
+from repro.core.gspmd import GSPMDConfig, ShardingRules, make_train_step
+from repro.data import sample_lengths
+from repro.launch import hlo as H
+from repro.launch.mesh import make_host_mesh
+from repro.launch.train import build_minibatch
+from repro.models import transformer as T
+from repro.optim import AdamWConfig, adamw_init
+
+
+def main():
+    cfg = get_reduced("gemma2-9b")
+    mesh = make_host_mesh()
+    world = mesh.shape["data"]
+    print(f"model={cfg.name} mesh={dict(mesh.shape)}")
+
+    # --- 1. an imbalanced minibatch, balanced at the minibatch level -----
+    lens = sample_lengths("longalign", world * 4, seed=0,
+                          max_len=192).tolist()
+    plan = lb_mini(lens, world, max_tokens=256)
+    print("per-device microbatch counts (LB-Mini, unequal by design):",
+          [len(d) for d in plan.assignments])
+
+    import numpy as np
+    rng = np.random.RandomState(0)
+    toks = [rng.randint(1, cfg.vocab_size, size=int(s)).astype(np.int32)
+            for s in lens]
+    batch = build_minibatch(plan, toks, 256, world)
+
+    # --- 2. one step, both communication schemes -------------------------
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    results = {}
+    for tag, sched, comm in [("FSDP/collective", "layer", "collective"),
+                             ("ODC/p2p", "minibatch", "odc")]:
+        gcfg = GSPMDConfig(rules=ShardingRules(), schedule=sched, comm=comm,
+                           block_kv=128)
+        step = jax.jit(make_train_step(cfg, mesh, gcfg, AdamWConfig()))
+        with mesh:
+            _, _, metrics = step(params, adamw_init(params), batch)
+            hlo = step.lower(params, adamw_init(params), batch) \
+                .compile().as_text()
+        cost = H.analyze_hlo_text(hlo)
+        results[tag] = (float(metrics["loss"]), cost)
+        c = cost.coll_count
+        print(f"{tag:16s} loss={float(metrics['loss']):.6f}  "
+              f"all-gather={c['all-gather']:.0f} "
+              f"reduce-scatter={c['reduce-scatter']:.0f} "
+              f"p2p-permute={c['collective-permute']:.0f}")
+
+    d = abs(results["FSDP/collective"][0] - results["ODC/p2p"][0])
+    print(f"loss difference: {d:.2e}  (ODC preserves training semantics; "
+          "only the communication schedule changes)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Batched serving example: prefill + greedy decode on the shared engine.
+
+Run:  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python examples/serve_batch.py --arch zamba2-1.2b
+"""
+import argparse
+import os
+import sys
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+from repro.launch import serve as serve_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="zamba2-1.2b")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+    return serve_mod.main([
+        "--arch", args.arch, "--reduced",
+        "--batch", str(args.batch),
+        "--prompt-len", "64",
+        "--gen", str(args.gen),
+    ])
+
+
+if __name__ == "__main__":
+    sys.exit(main())

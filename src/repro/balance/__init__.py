@@ -1,0 +1,13 @@
+from repro.balance.cost import CostModel, get_compute_costs  # noqa: F401
+from repro.balance.kk import karmarkar_karp  # noqa: F401
+from repro.balance.strategies import (  # noqa: F401
+    STRATEGIES,
+    Plan,
+    lb_micro,
+    lb_mini,
+    local_sort,
+    microbatch_partition,
+    minibatch_partition,
+    verl_native,
+    verl_optimized,
+)

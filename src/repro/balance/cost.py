@@ -1,0 +1,66 @@
+"""Workload cost + memory model for sequence batching (paper §2.2/§4).
+
+For a sample of sequence length ``s`` on a transformer:
+
+  compute  ≈ a·s + b·s²   (linear MLP/projections + quadratic attention)
+  memory   ≈ m·s          (activations are linear in s)
+
+The paper's central observation is the mismatch between the two: packing can
+equalize *memory* (token counts) but not *compute* whenever a long sample's
+quadratic cost exceeds any combination of short ones that fits in memory.
+
+For attention-free (SSM) or sliding-window layers the quadratic term is
+replaced by the appropriate sub-quadratic law, which is why the predicted
+ODC gains shrink for those families (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    """Per-token linear and per-token² attention coefficients.
+
+    Defaults follow the paper's regime: cost normalized so a 1-token sample
+    costs ~1; quadratic term calibrated so attention ≈ linear cost at
+    ``balance_point`` tokens (for LLM post-training with seq up to 64k the
+    attention share is large).
+    """
+
+    linear_coef: float = 1.0
+    quad_coef: float = 1.0 / 4096.0  # attention == linear cost at 4k tokens
+    window: int = 0       # >0: sliding-window attention (cost a·s + b·s·w)
+    attention_free: bool = False  # SSM: pure linear
+
+    def sample_cost(self, s: int) -> float:
+        if self.attention_free:
+            return self.linear_coef * s
+        if self.window and s > self.window:
+            return self.linear_coef * s + self.quad_coef * s * self.window
+        return self.linear_coef * s + self.quad_coef * s * s
+
+    def costs(self, seqlens: Sequence[int]) -> List[float]:
+        return [self.sample_cost(int(s)) for s in seqlens]
+
+
+DEFAULT_COST_MODEL = CostModel()
+
+
+def get_compute_costs(seqlen_lst: Sequence[int],
+                      model: CostModel = DEFAULT_COST_MODEL) -> List[float]:
+    """Paper Listing 1: compute costs given the sequence lengths."""
+    return model.costs(seqlen_lst)
+
+
+def check_oom(micro_seqlen_lst: Sequence[int], max_tokens_per_microbatch: int) -> bool:
+    """Paper Listing 1: True if this microbatch violates the memory budget.
+
+    Activation memory is linear in tokens, so the budget is a token budget.
+    """
+    return sum(int(s) for s in micro_seqlen_lst) > max_tokens_per_microbatch
+
+
+def microbatch_tokens(seqlens: Sequence[int]) -> int:
+    return sum(int(s) for s in seqlens)

@@ -1,0 +1,224 @@
+"""Load-balancing strategies from the paper (§4, §5.1, Appendix C).
+
+Every strategy maps (seqlens of one minibatch's global samples, world_size,
+memory budget) to a ``Plan``: per-device lists of microbatches, each
+microbatch a list of sample indices.
+
+  LocalSort      — samples round-robin'd to devices, sorted by length within
+                   each device, one sample per microbatch (no packing)
+                   [adapted from LongAlign].
+  LB-Micro       — heuristic packing that balances devices *within each
+                   microbatch* (same microbatch count everywhere) — the
+                   strong collective-compatible baseline.
+  LB-Mini        — the paper's §4 algorithm: Karmarkar–Karp balances total
+                   compute across devices at the *minibatch* level, then
+                   each device independently packs its local samples under
+                   its own memory budget.  Devices may end up with different
+                   microbatch counts — only valid with ODC.
+  verl_native    — verl's two-level scheme (global balance first, then
+                   minibatch split): the weak RL baseline (Listing 2).
+  verl_optimized — the paper's fixed ordering (split minibatches first,
+                   then balance each across devices): Listing 3.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.balance.cost import CostModel, DEFAULT_COST_MODEL, get_compute_costs
+from repro.balance.kk import karmarkar_karp
+
+
+@dataclasses.dataclass
+class Plan:
+    """device -> list of microbatches -> list of global sample indices."""
+
+    assignments: List[List[List[int]]]
+    strategy: str = ""
+
+    @property
+    def world_size(self) -> int:
+        return len(self.assignments)
+
+    @property
+    def max_microbatches(self) -> int:
+        return max((len(d) for d in self.assignments), default=0)
+
+    def uniform_microbatches(self) -> bool:
+        counts = {len(d) for d in self.assignments}
+        return len(counts) <= 1
+
+    def device_costs(self, costs: Sequence[float]) -> List[float]:
+        return [sum(costs[i] for mb in dev for i in mb)
+                for dev in self.assignments]
+
+    def validate(self, num_samples: int):
+        seen = sorted(i for dev in self.assignments for mb in dev for i in mb)
+        assert seen == list(range(num_samples)), "plan must cover every sample exactly once"
+
+
+# ---------------------------------------------------------------------------
+# microbatch packing under a token budget
+# ---------------------------------------------------------------------------
+def microbatch_partition(minibatch_costs: Sequence[float],
+                         minibatch_seqlens: Sequence[int],
+                         max_tokens: int,
+                         *, equal_size: bool = False) -> List[List[int]]:
+    """Paper Listing 1: iteratively increase the microbatch count until no
+    microbatch violates the (token) memory budget."""
+    n = len(minibatch_seqlens)
+    if n == 0:
+        return [[]]
+    k = max(1, int(np.ceil(sum(minibatch_seqlens) / max(max_tokens, 1))))
+    while True:
+        parts = karmarkar_karp(list(minibatch_costs), k, equal_size=equal_size)
+        ok = all(sum(minibatch_seqlens[i] for i in p) <= max_tokens
+                 for p in parts if p)
+        if ok or k >= n:
+            return [p for p in parts if p] or [[]]
+        k += 1
+
+
+def minibatch_partition(global_costs: Sequence[float], world_size: int,
+                        *, equal_size: bool) -> List[List[int]]:
+    """Paper Listing 1: balance the global minibatch across devices."""
+    return karmarkar_karp(list(global_costs), world_size,
+                          equal_size=equal_size)
+
+
+# ---------------------------------------------------------------------------
+# strategies
+# ---------------------------------------------------------------------------
+def local_sort(seqlens: Sequence[int], world_size: int, max_tokens: int,
+               cost_model: CostModel = DEFAULT_COST_MODEL) -> Plan:
+    """Dataloader-natural (hash-shuffled) distribution, sort by length
+    locally, no packing — the LongAlign baseline."""
+    order = list(np.random.RandomState(len(seqlens)).permutation(len(seqlens)))
+    devices: List[List[int]] = [[] for _ in range(world_size)]
+    for j, idx in enumerate(order):
+        devices[j % world_size].append(int(idx))
+    assignments = []
+    for dev in devices:
+        dev_sorted = sorted(dev, key=lambda i: seqlens[i])
+        assignments.append([[i] for i in dev_sorted])
+    # pad so every device has the same number of microbatches (collective
+    # compatibility: empty microbatches are no-ops but keep devices in step)
+    m = max(len(d) for d in assignments)
+    for d in assignments:
+        d.extend([[] for _ in range(m - len(d))])
+    return Plan(assignments, "LocalSort")
+
+
+def lb_micro(seqlens: Sequence[int], world_size: int, max_tokens: int,
+             cost_model: CostModel = DEFAULT_COST_MODEL) -> Plan:
+    """Balance across devices *within each microbatch wave* (uniform
+    microbatch count — collective-compatible).
+
+    1. choose the common per-device microbatch count k (memory-driven);
+    2. Karmarkar–Karp the whole minibatch into k·W cost-balanced
+       microbatches under the token budget;
+    3. sort microbatches by cost and give each *wave* W of adjacent cost,
+       so the per-layer barrier (max over devices) wastes as little as
+       possible in every wave.
+    """
+    costs = get_compute_costs(seqlens, cost_model)
+    n = len(seqlens)
+    W = world_size
+    total_tokens = sum(seqlens)
+    k = max(1, int(np.ceil(total_tokens / max(max_tokens * W, 1))))
+    while True:
+        parts = karmarkar_karp(costs, k * W, equal_size=False)
+        ok = all(sum(seqlens[i] for i in p) <= max_tokens for p in parts)
+        if ok or k * W >= n:
+            break
+        k += 1
+    part_costs = [sum(costs[i] for i in p) for p in parts]
+    order = sorted(range(len(parts)), key=lambda j: -part_costs[j])
+    assignments: List[List[List[int]]] = [[] for _ in range(W)]
+    load = [0.0] * W
+    for w in range(k):
+        wave = order[w * W: (w + 1) * W]
+        # LPT across waves: biggest microbatch of the wave goes to the
+        # least-loaded device, equalizing *total* device time as well
+        # (irrelevant under per-layer barriers, decisive under ODC).
+        by_load = sorted(range(W), key=lambda d: load[d])
+        for slot, j in enumerate(wave):
+            d = by_load[slot]
+            assignments[d].append(parts[j])
+            load[d] += part_costs[j]
+        for slot in range(len(wave), W):
+            assignments[by_load[slot]].append([])
+    return Plan(assignments, "LB-Micro")
+
+
+def lb_mini(seqlens: Sequence[int], world_size: int, max_tokens: int,
+            cost_model: CostModel = DEFAULT_COST_MODEL) -> Plan:
+    """Paper §4: balance total compute across devices at the minibatch
+    level (unequal sample counts allowed), then pack locally under the
+    memory budget.  Microbatch counts may differ per device → ODC only."""
+    costs = get_compute_costs(seqlens, cost_model)
+    device_parts = minibatch_partition(costs, world_size, equal_size=False)
+    assignments = []
+    for part in device_parts:
+        local_costs = [costs[i] for i in part]
+        local_lens = [seqlens[i] for i in part]
+        local_mbs = microbatch_partition(local_costs, local_lens, max_tokens)
+        assignments.append([[part[i] for i in mb] for mb in local_mbs])
+    return Plan(assignments, "LB-Mini")
+
+
+def verl_native(seqlens: Sequence[int], world_size: int, max_tokens: int,
+                minibatch_size: int,
+                cost_model: CostModel = DEFAULT_COST_MODEL) -> List[Plan]:
+    """Listing 2: balance the *global batch* across devices first, then
+    split each device's share into minibatches — fails to balance within
+    minibatches.  Returns one Plan per minibatch (PPO step)."""
+    costs = get_compute_costs(seqlens, cost_model)
+    rank_parts = karmarkar_karp(costs, world_size, equal_size=True)
+    n_mini = max(1, int(np.ceil(max(len(p) for p in rank_parts)
+                                / max(minibatch_size, 1))))
+    plans = []
+    for step in range(n_mini):
+        assignments = []
+        for part in rank_parts:
+            part_sorted = sorted(part)
+            lo = step * minibatch_size
+            chunk = part_sorted[lo: lo + minibatch_size]
+            local_costs = [costs[i] for i in chunk]
+            local_lens = [seqlens[i] for i in chunk]
+            mbs = microbatch_partition(local_costs, local_lens, max_tokens)
+            assignments.append([[chunk[i] for i in mb] for mb in mbs])
+        m = max(len(d) for d in assignments)
+        for d in assignments:  # per-layer sync ⇒ equalized microbatch count
+            d.extend([[] for _ in range(m - len(d))])
+        plans.append(Plan(assignments, "verl-native"))
+    return plans
+
+
+def verl_optimized(seqlens: Sequence[int], world_size: int, max_tokens: int,
+                   minibatch_size: int,
+                   cost_model: CostModel = DEFAULT_COST_MODEL,
+                   seed: int = 0) -> List[Plan]:
+    """Listing 3: split minibatches first, then balance each minibatch
+    across ranks (LB-Micro-quality balancing per PPO step)."""
+    rng = np.random.RandomState(seed)
+    order = rng.permutation(len(seqlens))
+    step = minibatch_size * world_size
+    plans = []
+    for lo in range(0, len(order), step):
+        idx = [int(i) for i in order[lo: lo + step]]
+        sub_lens = [seqlens[i] for i in idx]
+        plan = lb_micro(sub_lens, world_size, max_tokens, cost_model)
+        remapped = [[[idx[i] for i in mb] for mb in dev]
+                    for dev in plan.assignments]
+        plans.append(Plan(remapped, "verl-optimized"))
+    return plans
+
+
+STRATEGIES = {
+    "local_sort": local_sort,
+    "lb_micro": lb_micro,
+    "lb_mini": lb_mini,
+}

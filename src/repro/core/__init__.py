@@ -1,0 +1,13 @@
+from repro.core import odc  # noqa: F401
+from repro.core.fsdp import (  # noqa: F401
+    FSDPConfig,
+    FSDPShard,
+    fsdp_loss_and_grad,
+    gather_all,
+    make_pxform,
+    place_storage,
+    shard_params,
+    storage_pspecs,
+    unshard_params,
+)
+from repro.core.train_step import FSDPTrainer, make_loss_sum_fn  # noqa: F401

@@ -1,0 +1,3 @@
+from repro.data.lengths import DATASETS, sample_lengths  # noqa: F401
+from repro.data.packing import pack_plan_to_batches, pack_sequences  # noqa: F401
+from repro.data.loader import SyntheticSFTLoader, grpo_batch  # noqa: F401

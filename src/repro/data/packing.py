@@ -1,0 +1,57 @@
+"""Sequence packing: samples -> fixed-size token buffers with segment ids.
+
+Packing concatenates multiple samples into one (buffer_len,) sequence;
+``segment_ids`` keep attention from crossing sample boundaries
+(cross-contamination-free packing, Krell et al. 2021) and ``positions``
+restart per sample (RoPE correctness).  Loss masks cover real tokens only.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+
+def pack_sequences(sample_tokens: Sequence[np.ndarray], buffer_len: int,
+                   pad_id: int = 0) -> Dict[str, np.ndarray]:
+    """Pack samples (each a 1-D token array) into ONE buffer row.
+
+    Returns tokens/targets/positions/segment_ids/loss_mask of shape
+    (buffer_len,).  Targets are next-token shifted within each segment;
+    the final position of each segment is masked out.  Padding has
+    segment_id = -1.
+    """
+    tokens = np.full((buffer_len,), pad_id, np.int32)
+    targets = np.full((buffer_len,), pad_id, np.int32)
+    positions = np.zeros((buffer_len,), np.int32)
+    segment_ids = np.full((buffer_len,), -1, np.int32)
+    loss_mask = np.zeros((buffer_len,), np.float32)
+    cur = 0
+    for seg, toks in enumerate(sample_tokens):
+        s = len(toks)
+        assert cur + s <= buffer_len, "samples exceed the buffer"
+        tokens[cur: cur + s] = toks
+        targets[cur: cur + s - 1] = toks[1:]
+        positions[cur: cur + s] = np.arange(s)
+        segment_ids[cur: cur + s] = seg
+        loss_mask[cur: cur + s - 1] = 1.0
+        cur += s
+    return {
+        "tokens": tokens, "targets": targets, "positions": positions,
+        "segment_ids": segment_ids, "loss_mask": loss_mask,
+    }
+
+
+def pack_plan_to_batches(plan_microbatches: Sequence[Sequence[int]],
+                         sample_tokens: Sequence[np.ndarray],
+                         buffer_len: int, pad_id: int = 0):
+    """One device's microbatch index lists -> stacked (M, 1, buffer_len)
+    arrays (each microbatch is one packed buffer row)."""
+    rows = [pack_sequences([sample_tokens[i] for i in mb], buffer_len, pad_id)
+            for mb in plan_microbatches]
+    if not rows:
+        rows = [pack_sequences([], buffer_len, pad_id)]
+    return {
+        k: np.stack([r[k] for r in rows])[:, None, :]
+        for k in rows[0]
+    }

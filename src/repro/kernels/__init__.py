@@ -1,0 +1,13 @@
+"""Pallas TPU kernels (validated on CPU with interpret mode).
+
+  odc_gather       one-sided remote-DMA ring *gather* (paper Fig. 5 left)
+  odc_scatter      one-sided remote-DMA ring *scatter-accumulate* (right)
+  gather_matmul    ODC gather fused with the consumer matmul — the §6.1
+                   "overlap communication with computation" realized at
+                   kernel level (collective-matmul pattern)
+  flash_attention  blockwise attention: causal, sliding-window, softcap
+  ssd_scan         Mamba2 SSD chunked scan
+
+Each kernel has a jit wrapper in ``repro.kernels.ops`` and a pure-jnp
+oracle in ``repro.kernels.ref``.
+"""

@@ -1,0 +1,156 @@
+"""Blockwise (flash) attention Pallas kernel for TPU.
+
+Supports the features the assigned architectures need: causal masking,
+sliding-window locality (gemma2/gemma3 local layers), logit soft-capping
+(gemma2/grok), GQA (q-heads grouped over kv-heads), and packed-sequence
+segment masking.
+
+Grid: (batch·q_heads, q_blocks, kv_blocks) — kv dimension iterated
+sequentially per core with the online-softmax state (m, l, acc) carried in
+VMEM scratch across kv steps.  BlockSpecs tile q/k/v into VMEM: block
+shapes are (1, blk_q, hd) / (1, blk_k, hd) with hd padded by the caller to
+a 128 multiple for MXU alignment.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+
+
+def _attn_kernel(qpos_ref, kpos_ref, qseg_ref, kseg_ref,
+                 q_ref, k_ref, v_ref, out_ref,
+                 m_ref, l_ref, acc_ref,
+                 *, causal, window, softcap, scale, num_kv_blocks):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale  # (blk_q, hd)
+    k = k_ref[0].astype(jnp.float32)          # (blk_k, hd)
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    qp = qpos_ref[0]  # (blk_q,)
+    kp = kpos_ref[0]  # (blk_k,)
+    rel = qp[:, None] - kp[None, :]
+    mask = kp[None, :] >= 0  # negative kv positions = padding
+    if causal:
+        mask &= rel >= 0
+    if window > 0:
+        mask &= rel < window
+    qs = qseg_ref[0]
+    ks = kseg_ref[0]
+    mask &= qs[:, None] == ks[None, :]
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.max(s, axis=1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ik == num_kv_blocks - 1)
+    def _finish():
+        out_ref[0] = (acc_ref[...] /
+                      jnp.maximum(l_ref[...], 1e-30)[:, None]
+                      ).astype(out_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal=True, window=0,
+                           logit_softcap=0.0, q_positions=None,
+                           kv_positions=None, q_segment_ids=None,
+                           kv_segment_ids=None, blk_q=128, blk_k=128,
+                           scale=None, interpret=True):
+    """q: (B, S, H, hd); k, v: (B, T, KH, hd) with H % KH == 0.
+
+    Returns (B, S, H, hd).  S/T are padded to block multiples internally.
+    """
+    B, S, H, hd = q.shape
+    T, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    if scale is None:
+        scale = hd ** -0.5
+    if q_positions is None:
+        q_positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    if kv_positions is None:
+        kv_positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+    if q_segment_ids is None:
+        q_segment_ids = jnp.zeros((B, S), jnp.int32)
+    if kv_segment_ids is None:
+        kv_segment_ids = jnp.zeros((B, T), jnp.int32)
+
+    blk_q = min(blk_q, S)
+    blk_k = min(blk_k, T)
+    pad_q = (-S) % blk_q
+    pad_k = (-T) % blk_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        q_positions = jnp.pad(q_positions, ((0, 0), (0, pad_q)),
+                              constant_values=0)
+        q_segment_ids = jnp.pad(q_segment_ids, ((0, 0), (0, pad_q)),
+                                constant_values=-2)
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, ((0, 0), (0, pad_k)),
+                               constant_values=-(10 ** 9))
+        kv_segment_ids = jnp.pad(kv_segment_ids, ((0, 0), (0, pad_k)),
+                                 constant_values=-1)
+    Sp, Tp = S + pad_q, T + pad_k
+    nq, nk = Sp // blk_q, Tp // blk_k
+
+    # (B, S, H, hd) -> (B*H, S, hd) with kv-head mapping h -> h // G
+    qh = jnp.moveaxis(q, 2, 1).reshape(B * H, Sp, hd)
+    kh = jnp.moveaxis(k, 2, 1).reshape(B * KH, Tp, hd)
+    vh = jnp.moveaxis(v, 2, 1).reshape(B * KH, Tp, hd)
+
+    grid = (B * H, nq, nk)
+    kernel = functools.partial(
+        _attn_kernel, causal=causal, window=int(window),
+        softcap=float(logit_softcap), scale=float(scale), num_kv_blocks=nk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, blk_q), lambda bh, iq, ik: (bh // H, iq)),
+            pl.BlockSpec((1, blk_k), lambda bh, iq, ik: (bh // H, ik)),
+            pl.BlockSpec((1, blk_q), lambda bh, iq, ik: (bh // H, iq)),
+            pl.BlockSpec((1, blk_k), lambda bh, iq, ik: (bh // H, ik)),
+            pl.BlockSpec((1, blk_q, hd), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, blk_k, hd),
+                         lambda bh, iq, ik: ((bh // H) * KH + (bh % H) // G,
+                                             ik, 0)),
+            pl.BlockSpec((1, blk_k, hd),
+                         lambda bh, iq, ik: ((bh // H) * KH + (bh % H) // G,
+                                             ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, hd), lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sp, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q,), jnp.float32),
+            pltpu.VMEM((blk_q,), jnp.float32),
+            pltpu.VMEM((blk_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_positions, kv_positions, q_segment_ids, kv_segment_ids, qh, kh, vh)
+
+    out = out.reshape(B, H, Sp, hd)[:, :, :S]
+    return jnp.moveaxis(out, 1, 2)

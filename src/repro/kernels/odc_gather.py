@@ -1,0 +1,91 @@
+"""ODC *gather* as a one-sided remote-DMA ring kernel (TPU).
+
+The paper's `gather` pulls parameter shards from peers over RDMA
+(NVSHMEM ``get_mem``).  The TPU-native equivalent is the put+signal model:
+each device forwards shards around the ring with
+``pltpu.make_async_remote_copy`` — one-sided writes into the neighbor's
+buffer, synchronized only by DMA semaphores between the two endpoints.
+There is NO fused collective and NO global barrier: every hop is a
+pairwise producer/consumer handoff, which is exactly the non-intrusive
+property §3.2 needs (the peer's compute core is never interrupted; the
+DMA engines move the bytes).
+
+Layout: shards live in HBM (``pl.ANY``); a two-slot VMEM staging buffer
+double-buffers the in-flight hop.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(x_ref, out_ref, buf_ref, send_sem, recv_sem, credit_sem,
+                   axis_name):
+    num = jax.lax.axis_size(axis_name)
+    me = jax.lax.axis_index(axis_name)
+    right = jax.lax.rem(me + 1, num)
+    left = jax.lax.rem(me - 1 + num, num)
+
+    # my own shard: HBM -> HBM copy into my slot of the output
+    pltpu.sync_copy(x_ref, out_ref.at[me])
+    # stage my shard for the first hop
+    pltpu.sync_copy(x_ref, buf_ref.at[0])
+
+    # Two staging slots give two hops of slack; beyond that a sender must
+    # hold until the receiver has consumed the slot it is about to
+    # overwrite (credit signaled back after the receiver's copy-out).
+    def hop(i, _):
+        slot = jax.lax.rem(i, 2)
+        nxt = jax.lax.rem(i + 1, 2)
+
+        @pl.when(i >= 2)
+        def _backpressure():
+            pltpu.semaphore_wait(credit_sem, 1)
+
+        rdma = pltpu.make_async_remote_copy(
+            src_ref=buf_ref.at[slot],
+            dst_ref=buf_ref.at[nxt],
+            send_sem=send_sem.at[slot],
+            recv_sem=recv_sem.at[nxt],
+            device_id=(right,),
+            device_id_type=pltpu.DeviceIdType.MESH,
+        )
+        rdma.start()
+        rdma.wait()  # pairwise sync with the two ring neighbors only
+        src = jax.lax.rem(me - i - 1 + num, num)  # who produced this shard
+        pltpu.sync_copy(buf_ref.at[nxt], out_ref.at[src])
+
+        @pl.when(i <= num - 4)
+        def _credit():  # buf[slot] is reusable by the left neighbor
+            pltpu.semaphore_signal(credit_sem, 1, device_id=left,
+                                   device_id_type=pltpu.DeviceIdType.MESH)
+
+        return 0
+
+    jax.lax.fori_loop(0, num - 1, hop, 0)
+
+
+def odc_gather_pallas(x, *, axis_name: str, interpret: bool = True):
+    """x: local shard (c, ...) inside shard_map -> (n, c, ...) stacked
+    shards (caller reshapes to the tiled gather layout)."""
+    n = jax.lax.axis_size(axis_name)
+    out_shape = jax.ShapeDtypeStruct((n,) + x.shape, x.dtype)
+    kernel = functools.partial(_gather_kernel, axis_name=axis_name)
+    return pl.pallas_call(
+        kernel,
+        out_shape=out_shape,
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=pl.BlockSpec(memory_space=pl.ANY),
+        scratch_shapes=[
+            pltpu.VMEM((2,) + x.shape, x.dtype),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.REGULAR,
+        ],
+        compiler_params=pltpu.CompilerParams(collective_id=0),
+        interpret=(pltpu.InterpretParams() if interpret else False),
+    )(x)

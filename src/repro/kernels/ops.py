@@ -1,0 +1,71 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On this container everything runs with ``interpret=True`` (CPU); on a real
+TPU pass ``interpret=False`` (the default flips on TPU backends).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.gather_matmul import gather_matmul_pallas
+from repro.kernels.odc_gather import odc_gather_pallas
+from repro.kernels.odc_scatter import odc_scatter_accumulate_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def odc_gather(x_shard, axis_name: str, *, interpret=None):
+    """Inside shard_map: (c, ...) local shard -> (n*c, ...) full tensor,
+    via one-sided remote-DMA ring hops (no fused collective)."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    stacked = odc_gather_pallas(x_shard, axis_name=axis_name,
+                                interpret=interpret)
+    n = stacked.shape[0]
+    return stacked.reshape((n * x_shard.shape[0],) + x_shard.shape[1:])
+
+
+def odc_scatter_accumulate(y, axis_name: str, *, interpret=None):
+    """Inside shard_map: (n*c, ...) local contribution -> (c, ...) owned,
+    fully-accumulated chunk."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    n = jax.lax.axis_size(axis_name)
+    c = y.shape[0] // n
+    stacked = y.reshape((n, c) + y.shape[1:])
+    return odc_scatter_accumulate_pallas(stacked, axis_name=axis_name,
+                                         interpret=interpret)
+
+
+def gather_matmul(x, w_shard, axis_name: str, *, interpret=None):
+    """Inside shard_map: x (m, k) replicated, w_shard (k/n, f) local ->
+    (m, f) = x @ W_full, with the ring DMA hidden under the matmuls."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return gather_matmul_pallas(x, w_shard, axis_name=axis_name,
+                                interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "logit_softcap", "blk_q", "blk_k", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, logit_softcap=0.0,
+                    q_positions=None, kv_positions=None, q_segment_ids=None,
+                    kv_segment_ids=None, blk_q=128, blk_k=128,
+                    interpret=None):
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, logit_softcap=logit_softcap,
+        q_positions=q_positions, kv_positions=kv_positions,
+        q_segment_ids=q_segment_ids, kv_segment_ids=kv_segment_ids,
+        blk_q=blk_q, blk_k=blk_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int, interpret=None):
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return ssd_scan_pallas(x, dt, A, Bm, Cm, chunk=chunk,
+                           interpret=interpret)

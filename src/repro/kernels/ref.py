@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every kernel in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.odc import ring_gather, ring_scatter_accumulate  # noqa: F401
+from repro.models.layers import blockwise_attention
+from repro.models.ssm import ssd_chunked
+
+
+def gather_ref(x_shard, axis_name: str):
+    """Oracle for odc_gather: the fused collective."""
+    return jax.lax.all_gather(x_shard, axis_name, tiled=False)
+
+
+def scatter_accumulate_ref(y, axis_name: str):
+    """Oracle for odc_scatter: psum then take own chunk.  y: (n, c, ...)."""
+    summed = jax.lax.psum(y, axis_name)
+    me = jax.lax.axis_index(axis_name)
+    return summed[me]
+
+
+def gather_matmul_ref(x, w_shard, axis_name: str):
+    """Oracle for the fused gather+matmul."""
+    w_full = jax.lax.all_gather(w_shard, axis_name, tiled=True)
+    return x @ w_full
+
+
+def flash_attention_ref(q, k, v, **kw):
+    """Oracle for flash_attention: materialized-scores blockwise path."""
+    kw.setdefault("block_kv", max(k.shape[1], 1))
+    return blockwise_attention(q, k, v, **kw)
+
+
+def ssd_scan_ref(x, dt, A, Bm, Cm, *, chunk: int):
+    """Oracle for ssd_scan."""
+    return ssd_chunked(x, dt, A, Bm, Cm, chunk)

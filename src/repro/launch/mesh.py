@@ -1,0 +1,35 @@
+"""Mesh construction.
+
+Functions (not module-level constants) so importing this module never
+touches jax device state.  The production target is TPU v5e:
+
+  single pod:  (data=16, model=16)            = 256 chips
+  multi-pod:   (pod=2, data=16, model=16)     = 512 chips
+
+The dry-run launcher sets XLA_FLAGS=--xla_force_host_platform_device_count
+*before* importing jax; everything else sees the real single CPU device.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 0, model: int = 1, pod: int = 1):
+    """A small mesh over whatever local devices exist (tests / examples).
+
+    data=0 consumes all remaining devices on the data axis."""
+    n = jax.device_count()
+    if data == 0:
+        data = n // (model * pod)
+    shape = (pod, data, model) if pod > 1 else (data, model)
+    axes = ("pod", "data", "model") if pod > 1 else ("data", "model")
+    devs = np.asarray(jax.devices()[: int(np.prod(shape))]).reshape(shape)
+    return Mesh(devs, axes)

@@ -1,0 +1,91 @@
+"""Batched serving driver: prefill a request batch, then decode greedily.
+
+Uses the same GSPMD sharding rules as training (params over data+model,
+KV cache over batch/model) and the prefill/decode steps from
+``repro.core.gspmd``.
+
+Example (CPU, reduced config):
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma2-9b --reduced \
+      --batch 8 --prompt-len 64 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_reduced
+from repro.core.gspmd import (
+    GSPMDConfig, ShardingRules, make_decode_step, make_prefill_step,
+)
+from repro.launch.mesh import make_host_mesh
+from repro.models import transformer as T
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-9b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--data-axis", type=int, default=0)
+    ap.add_argument("--model-axis", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    mesh = make_host_mesh(data=args.data_axis, model=args.model_axis)
+    gcfg = GSPMDConfig(rules=ShardingRules(), block_kv=256)
+    print(f"[serve] {cfg.name} mesh={dict(mesh.shape)} "
+          f"batch={args.batch} prompt={args.prompt_len} gen={args.gen}")
+
+    key = jax.random.PRNGKey(args.seed)
+    params = T.init_params(cfg, key)
+    B, S = args.batch, args.prompt_len
+    max_len = S + args.gen
+    tokens = jax.random.randint(key, (B, S), 1, cfg.vocab_size)
+    enc_len = S if cfg.family == "audio" else 0
+    cache = T.init_cache(cfg, B, max_len, enc_len=enc_len)
+
+    prefill = jax.jit(make_prefill_step(cfg, mesh, gcfg))
+    decode = jax.jit(make_decode_step(cfg, mesh, gcfg), donate_argnums=(1,))
+
+    batch = {"tokens": tokens,
+             "positions": jnp.arange(S)[None].repeat(B, 0)}
+    if cfg.family == "audio":
+        batch["encoder_embeds"] = jax.random.normal(key, (B, S, cfg.d_model))
+    if cfg.frontend == "vision" and cfg.frontend_tokens:
+        n = min(cfg.frontend_tokens, S)
+        batch["vision_embeds"] = jax.random.normal(key, (B, n, cfg.d_model))
+
+    t0 = time.time()
+    with mesh:
+        logits, cache = prefill(params, batch, cache)
+    next_tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+    t_prefill = time.time() - t0
+    print(f"[serve] prefill {B}x{S} in {t_prefill:.2f}s "
+          f"({B * S / t_prefill:.0f} tok/s)")
+
+    generated = [next_tok]
+    t0 = time.time()
+    for i in range(args.gen - 1):
+        with mesh:
+            logits, cache = decode(params, cache, next_tok,
+                                   jnp.int32(S + i))
+        next_tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        generated.append(next_tok)
+    jax.block_until_ready(next_tok)
+    t_dec = time.time() - t0
+    out = jnp.concatenate(generated, axis=1)
+    print(f"[serve] decoded {args.gen - 1} steps x {B} requests in "
+          f"{t_dec:.2f}s ({B * (args.gen - 1) / max(t_dec, 1e-9):.1f} tok/s)")
+    print(f"[serve] sample output ids: {out[0, :16].tolist()}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

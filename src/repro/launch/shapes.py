@@ -1,0 +1,84 @@
+"""Assigned input shapes and ShapeDtypeStruct stand-in builders.
+
+The four assigned shapes:
+
+  train_4k     seq_len=4096    global_batch=256   (training)
+  prefill_32k  seq_len=32768   global_batch=32    (inference prefill)
+  decode_32k   seq_len=32768   global_batch=128   (inference decode: one new
+                                                   token, KV cache of 32k)
+  long_500k    seq_len=524288  global_batch=1     (long-context decode)
+
+``long_500k`` requires a sub-quadratic story — see DESIGN.md §Arch-
+applicability for which architectures run it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    kind: str  # 'train' | 'prefill' | 'decode'
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", "train", 4_096, 256),
+    "prefill_32k": InputShape("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": InputShape("decode_32k", "decode", 32_768, 128),
+    "long_500k": InputShape("long_500k", "decode", 524_288, 1),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: InputShape) -> bool:
+    """long_500k runs only for sub-quadratic archs (SSM / hybrid / native
+    sliding-window dense); other skips: none (all assigned archs decode)."""
+    if shape.name == "long_500k":
+        return cfg.supports_long_context
+    return True
+
+
+def train_batch_shapes(cfg: ModelConfig, shape: InputShape,
+                       num_microbatches: int = 0, dp_size: int = 16):
+    """(M, B, S) microbatched ShapeDtypeStructs (no shardings attached —
+    the engine adds them).  Default M puts one sequence per device per
+    microbatch."""
+    B, S = shape.global_batch, shape.seq_len
+    M = num_microbatches or max(1, B // dp_size)
+    assert B % M == 0, (B, M)
+    Bm = B // M
+    i32 = jnp.int32
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((M, Bm, S), i32),
+        "positions": jax.ShapeDtypeStruct((M, Bm, S), i32),
+        "segment_ids": jax.ShapeDtypeStruct((M, Bm, S), i32),
+        "targets": jax.ShapeDtypeStruct((M, Bm, S), i32),
+        "loss_mask": jax.ShapeDtypeStruct((M, Bm, S), jnp.float32),
+    }
+    if cfg.family == "audio":
+        # stub frontend: precomputed frame embeddings, same length budget
+        batch["encoder_embeds"] = jax.ShapeDtypeStruct(
+            (M, Bm, S, cfg.d_model), jnp.float32)
+    if cfg.frontend == "vision" and cfg.frontend_tokens:
+        batch["vision_embeds"] = jax.ShapeDtypeStruct(
+            (M, Bm, cfg.frontend_tokens, cfg.d_model), jnp.float32)
+    return batch
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, *, dp_size: int = 16,
+                num_microbatches: int = 0):
+    """Public entry: ShapeDtypeStruct stand-ins for every model input of the
+    given assigned shape (training batches or serve batch geometry)."""
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return train_batch_shapes(cfg, shape, num_microbatches, dp_size)
+    return {"batch": shape.global_batch, "seq_len": shape.seq_len,
+            "kind": shape.kind}

@@ -1,0 +1,2 @@
+from repro.models.config import ModelConfig, reduced  # noqa: F401
+from repro.models import transformer  # noqa: F401

@@ -1,0 +1,186 @@
+"""Mamba2 (SSD — state-space duality) block, pure JAX.
+
+The prefill/training path uses the chunked SSD algorithm [arXiv:2405.21060]:
+intra-chunk attention-like diagonal blocks + inter-chunk recurrence over
+chunk states.  The decode path is the classic recurrent state update.
+Chunk size bounds the (Q, Q) intra-chunk matrices, so memory is
+O(S * chunk) like blockwise attention.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm
+
+
+def mamba2_params(key, cfg, dtype, prefix_shape=()):
+    d = cfg.d_model
+    di, nh, ng, ss = cfg.ssm_d_inner, cfg.ssm_nheads, cfg.ssm_ngroups, cfg.ssm_state_size
+    conv_dim = di + 2 * ng * ss
+    ks = jax.random.split(key, 4)
+    in_dim = 2 * di + 2 * ng * ss + nh  # z, x, B, C, dt
+    return {
+        "in_proj": dense_init(ks[0], prefix_shape + (d, in_dim), dtype),
+        "conv_w": dense_init(ks[1], prefix_shape + (cfg.ssm_conv_width, conv_dim), dtype),
+        "conv_b": jnp.zeros(prefix_shape + (conv_dim,), dtype),
+        "dt_bias": jnp.zeros(prefix_shape + (nh,), dtype),
+        "A_log": jnp.zeros(prefix_shape + (nh,), dtype),
+        "D": jnp.ones(prefix_shape + (nh,), dtype),
+        "gate_norm": jnp.zeros(prefix_shape + (di,), dtype),
+        "out_proj": dense_init(ks[2], prefix_shape + (di, d), dtype,
+                               scale=1.0 / max(1, cfg.num_layers) ** 0.5),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv.  x: (B, S, C); w: (W, C)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(W))
+    return jax.nn.silu(out + b)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, initial_state=None):
+    """Chunked SSD scan.
+
+    x: (b, s, h, p) — dt-premultiplied inputs; dt: (b, s, h); A: (h,) < 0;
+    Bm, Cm: (b, s, g, n) with h % g == 0.  Returns (y, final_state) where
+    y: (b, s, h, p), final_state: (b, h, p, n).
+    """
+    b, s, h, p = x.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    rep = h // g
+    Q = min(chunk, s)
+    assert s % Q == 0, f"seq {s} not divisible by chunk {Q}"
+    Nc = s // Q
+
+    xd = (x * dt[..., None]).astype(jnp.float32).reshape(b, Nc, Q, h, p)
+    Adt = (A * dt).astype(jnp.float32).reshape(b, Nc, Q, h)
+    Bc = Bm.astype(jnp.float32).reshape(b, Nc, Q, g, n)
+    Cc = Cm.astype(jnp.float32).reshape(b, Nc, Q, g, n)
+    # expand groups to heads
+    Bh = jnp.repeat(Bc, rep, axis=3)  # (b,Nc,Q,h,n)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    Acum = jnp.cumsum(Adt, axis=2)  # (b,Nc,Q,h)
+
+    # ---- intra-chunk (diagonal blocks) -----------------------------------
+    # L[q, t] = exp(Acum[q] - Acum[t]) for q >= t (else 0)
+    Lmat = jnp.exp(Acum[:, :, :, None, :] - Acum[:, :, None, :, :])  # (b,Nc,Q,Q,h)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    Lmat = jnp.where(tri[None, None, :, :, None], Lmat, 0.0)
+    scores = jnp.einsum("bcqhn,bcthn->bcqth", Ch, Bh)  # (b,Nc,Q,Q,h)
+    y_diag = jnp.einsum("bcqth,bcqth,bcthp->bcqhp", scores, Lmat, xd)
+
+    # ---- chunk states ----------------------------------------------------
+    decay_to_end = jnp.exp(Acum[:, :, -1:, :] - Acum)  # (b,Nc,Q,h)
+    states = jnp.einsum("bcqhn,bcqh,bcqhp->bchpn", Bh, decay_to_end, xd)
+
+    # ---- inter-chunk recurrence ------------------------------------------
+    chunk_decay = jnp.exp(Acum[:, :, -1, :])  # (b,Nc,h)
+    s0 = (
+        jnp.zeros((b, h, p, n), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+
+    def step(carry, inp):
+        st_c, dec = inp  # (b,h,p,n), (b,h)
+        prior = carry
+        new = prior * dec[:, :, None, None] + st_c
+        return new, prior
+
+    (final_state, priors) = jax.lax.scan(
+        step, s0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0))
+    )
+    priors = jnp.moveaxis(priors, 0, 1)  # (b,Nc,h,p,n) state entering each chunk
+
+    y_off = jnp.einsum("bcqhn,bcqh,bchpn->bcqhp", Ch, jnp.exp(Acum), priors)
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y.astype(x.dtype), final_state
+
+
+def ssd_recurrent_step(x_t, dt_t, A, B_t, C_t, state):
+    """One decode step.  x_t: (b, h, p); dt_t: (b, h); B_t, C_t: (b, g, n);
+    state: (b, h, p, n)."""
+    b, h, p = x_t.shape
+    g, n = B_t.shape[1], B_t.shape[2]
+    rep = h // g
+    Bh = jnp.repeat(B_t, rep, axis=1)  # (b,h,n)
+    Ch = jnp.repeat(C_t, rep, axis=1)
+    dA = jnp.exp((A * dt_t).astype(jnp.float32))  # (b,h)
+    xd = (x_t * dt_t[..., None]).astype(jnp.float32)
+    state = state * dA[:, :, None, None] + jnp.einsum("bhn,bhp->bhpn", Bh.astype(jnp.float32), xd)
+    y = jnp.einsum("bhn,bhpn->bhp", Ch.astype(jnp.float32), state)
+    return y.astype(x_t.dtype), state
+
+
+def mamba2_apply(cfg, p, x, *, cache=None):
+    """Mamba2 mixer.  x: (B, S, d).  cache (decode): dict with
+    'conv' (B, W-1, conv_dim) and 'ssm' (B, h, p, n).  Returns (out, cache).
+    """
+    B, S, d = x.shape
+    di, nh, ng, ss = cfg.ssm_d_inner, cfg.ssm_nheads, cfg.ssm_ngroups, cfg.ssm_state_size
+    hd = cfg.ssm_head_dim
+    conv_dim = di + 2 * ng * ss
+    W = cfg.ssm_conv_width
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xbc, dt = jnp.split(zxbcdt, [di, di + conv_dim], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    if cache is None or S > 1:
+        # training forward, or prefill-from-scratch into a fresh cache
+        raw_xbc = xbc
+        conv_out = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+        # pad sequence to a chunk multiple (padded steps have dt=0 -> no-op)
+        Q = min(cfg.ssm_chunk, max(1, S))
+        pad = (-S) % Q
+        if pad:
+            conv_out = jnp.pad(conv_out, ((0, 0), (0, pad), (0, 0)))
+            dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        else:
+            dt_p = dt
+        xs, Bm, Cm = jnp.split(conv_out, [di, di + ng * ss], axis=-1)
+        Sp = S + pad
+        xs = xs.reshape(B, Sp, nh, hd)
+        Bm = Bm.reshape(B, Sp, ng, ss)
+        Cm = Cm.reshape(B, Sp, ng, ss)
+        y, final_state = ssd_chunked(xs, dt_p, A, Bm, Cm, Q)
+        y = (y + xs * p["D"].astype(jnp.float32)[None, None, :, None])[:, :S]
+        xs = xs[:, :S]
+        if cache is None:
+            new_cache = None
+        else:
+            W1 = W - 1
+            tail = jnp.pad(raw_xbc, ((0, 0), (max(0, W1 - S), 0), (0, 0)))[:, -W1:]
+            new_cache = {"conv": tail.astype(cache["conv"].dtype), "ssm": final_state}
+    else:
+        assert S == 1, "decode path expects a single new token"
+        conv_state = cache["conv"]  # (B, W-1, conv_dim)
+        window = jnp.concatenate([conv_state, xbc], axis=1)  # (B, W, conv_dim)
+        conv_out = jax.nn.silu(
+            jnp.einsum("bwc,wc->bc", window, p["conv_w"]) + p["conv_b"]
+        )[:, None, :]
+        xs, Bm, Cm = jnp.split(conv_out, [di, di + ng * ss], axis=-1)
+        xs1 = xs.reshape(B, nh, hd)
+        y1, ssm_state = ssd_recurrent_step(
+            xs1, dt[:, 0], A, Bm.reshape(B, ng, ss), Cm.reshape(B, ng, ss), cache["ssm"]
+        )
+        y = (y1 + xs1 * p["D"].astype(jnp.float32)[None, :, None])[:, None]
+        new_cache = {"conv": window[:, 1:], "ssm": ssm_state}
+
+    y = y.reshape(B, S, di) * jax.nn.silu(z)
+    y = rms_norm(y, p["gate_norm"], cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"]), new_cache
+
+
+def init_ssm_cache(cfg, batch: int, dtype=jnp.float32):
+    di, ng, ss = cfg.ssm_d_inner, cfg.ssm_ngroups, cfg.ssm_state_size
+    conv_dim = di + 2 * ng * ss
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, cfg.ssm_nheads, cfg.ssm_head_dim, ss), jnp.float32),
+    }

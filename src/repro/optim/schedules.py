@@ -1,0 +1,15 @@
+"""Learning-rate schedules (scalar-in, scalar-out; jit-friendly)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(step, warmup_steps: int):
+    return jnp.minimum(1.0, (step + 1) / max(1, warmup_steps))
+
+
+def cosine_schedule(step, total_steps: int, warmup_steps: int = 0, floor: float = 0.1):
+    warm = linear_warmup(step, warmup_steps)
+    t = jnp.clip((step - warmup_steps) / max(1, total_steps - warmup_steps), 0.0, 1.0)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return warm * cos

@@ -1,0 +1,8 @@
+from repro.sim.engine import (  # noqa: F401
+    CommModel,
+    SimConfig,
+    SimResult,
+    bubble_rate,
+    simulate_minibatch,
+    simulate_training,
+)

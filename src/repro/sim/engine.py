@@ -1,0 +1,210 @@
+"""Execution-timing simulator: per-layer barriers (collective) vs
+minibatch barriers (ODC).
+
+This models the paper's Eq. 1 and its relaxation, which is a *runtime*
+property (device asynchrony) that a bulk-synchronous SPMD program cannot
+exhibit on a single host.  The simulator reproduces the paper's timing
+tables (3–6) and the parametric study (Fig. 10):
+
+  Collective (FSDP):  T = Σ_m Σ_l max_d  t(m, d, l)        (paper Eq. 1)
+  ODC:                T = max_d Σ_m Σ_l  t(m, d, l)  (+ final barrier)
+
+with per-(microbatch, device, layer) compute times from the cost model and
+per-layer communication charged from the Table 2 volume model.  Devices
+with fewer microbatches under LB-Mini simply finish their sums earlier —
+the ``max_d`` moves outside, which is the whole paper in one line.
+
+``bubble_rate`` = idle time / (devices × makespan), the paper's metric.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.balance.cost import CostModel, DEFAULT_COST_MODEL
+from repro.balance.strategies import Plan
+
+
+@dataclasses.dataclass(frozen=True)
+class CommModel:
+    """Per-layer communication times (seconds per byte + base latency).
+
+    Charged per microbatch per layer on the FSDP axis.  Volumes follow
+    paper Table 2 / Appendix D: both collective and ODC move (D-1)·K per
+    client; collectives ride the hierarchical path while ODC's p2p hops
+    cross nodes independently (slower inter-node bandwidth, the Fig. 11
+    effect), modeled with an efficiency factor < 1 for ODC when the axis
+    spans nodes.
+    """
+
+    layer_param_bytes: float = 2 * 50e6  # K: bytes of one layer's shard set
+    intra_bw: float = 300e9  # NVSwitch-class intra-node bytes/s
+    inter_bw: float = 100e9  # RDMA-class inter-node bytes/s (per client)
+    devices_per_node: int = 8
+    latency: float = 10e-6
+    odc_inter_efficiency: float = 0.5  # paper Fig. 11: p2p slower cross-node
+
+    def layer_comm_time(self, devices: int, odc: bool) -> float:
+        d, g = devices, min(self.devices_per_node, devices)
+        k = self.layer_param_bytes
+        if d <= 1:
+            return 0.0
+        if d <= g:  # single node
+            vol = (d - 1) / d * k
+            return self.latency + vol / self.intra_bw
+        intra = (g - 1) / g * k
+        if odc:
+            inter = (d - g) / d * k
+            bw = self.inter_bw * self.odc_inter_efficiency
+        else:
+            inter = (d - 1) / d * k / g  # hierarchical collective
+            bw = self.inter_bw
+        return self.latency + intra / self.intra_bw + inter / bw
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    num_layers: int = 24
+    cost_model: CostModel = DEFAULT_COST_MODEL
+    comm: CommModel = CommModel()
+    time_per_cost: float = 1e-6  # seconds per cost-model unit per layer
+    overlap: float = 1.0  # fraction of comm hidden under compute (§6.1)
+
+
+@dataclasses.dataclass
+class SimResult:
+    makespan: float
+    device_busy: List[float]
+    bubble_rate: float
+    device_finish: List[float]
+
+    @property
+    def throughput_scale(self) -> float:
+        return 1.0 / self.makespan if self.makespan > 0 else 0.0
+
+
+def _microbatch_times(plan: Plan, seqlens: Sequence[int], cfg: SimConfig):
+    """t[d][m]: compute seconds of device d's m-th microbatch (whole model,
+    all layers)."""
+    cm = cfg.cost_model
+    out = []
+    for dev in plan.assignments:
+        ts = []
+        for mb in dev:
+            c = sum(cm.sample_cost(seqlens[i]) for i in mb)
+            ts.append(c * cfg.time_per_cost * cfg.num_layers)
+        out.append(ts)
+    return out
+
+
+def simulate_minibatch(plan: Plan, seqlens: Sequence[int], *,
+                       scheme: str, cfg: SimConfig = SimConfig(),
+                       device_speed: Optional[Sequence[float]] = None
+                       ) -> SimResult:
+    """scheme: 'collective' (per-layer barrier, Eq. 1) or 'odc'
+    (independent progress, barrier only at the minibatch end).
+
+    device_speed: optional per-device relative speed (1.0 = nominal,
+    0.5 = a straggler at half speed) — the classic PS-vs-collective
+    heterogeneity scenario (paper §1/§6.2)."""
+    D = plan.world_size
+    times = _microbatch_times(plan, seqlens, cfg)
+    if device_speed is not None:
+        assert len(device_speed) == D
+        times = [[t / max(device_speed[d], 1e-9) for t in ts]
+                 for d, ts in enumerate(times)]
+    L = cfg.num_layers
+    odc = scheme == "odc"
+    comm_l = cfg.comm.layer_comm_time(D, odc) * (1.0 - cfg.overlap)
+
+    busy = [sum(ts) for ts in times]
+
+    if odc:
+        # each device runs straight through its own microbatches; the only
+        # barrier is the minibatch end (optimizer step).
+        finish = [b + L * comm_l * len(ts) for b, ts in zip(busy, times)]
+        makespan = max(finish) if finish else 0.0
+    else:
+        # per-layer lockstep: every (microbatch, layer) step is gated by the
+        # slowest device.  Devices with fewer microbatches still wait (they
+        # participate in the collectives with empty work).
+        M = max((len(ts) for ts in times), default=0)
+        makespan = 0.0
+        for m in range(M):
+            per_layer = [
+                (times[d][m] / L if m < len(times[d]) else 0.0)
+                for d in range(D)
+            ]
+            makespan += L * (max(per_layer) + comm_l)
+        finish = [makespan] * D
+
+    denom = D * makespan if makespan > 0 else 1.0
+    total_busy = sum(busy)
+    return SimResult(
+        makespan=makespan,
+        device_busy=busy,
+        bubble_rate=max(0.0, 1.0 - total_busy / denom),
+        device_finish=finish,
+    )
+
+
+def bubble_rate(plan: Plan, seqlens: Sequence[int], scheme: str,
+                cfg: SimConfig = SimConfig()) -> float:
+    return simulate_minibatch(plan, seqlens, scheme=scheme, cfg=cfg).bubble_rate
+
+
+def samples_per_second(plan: Plan, seqlens: Sequence[int], scheme: str,
+                       cfg: SimConfig = SimConfig()) -> float:
+    n = sum(len(mb) for dev in plan.assignments for mb in dev)
+    r = simulate_minibatch(plan, seqlens, scheme=scheme, cfg=cfg)
+    return n / r.makespan if r.makespan > 0 else 0.0
+
+
+def simulate_training(steps, *, scheme: str, cfg: SimConfig = SimConfig(),
+                      staleness: int = 0,
+                      device_speed: Optional[Sequence[float]] = None) -> float:
+    """Multi-minibatch makespan.  ``steps``: list of (plan, seqlens).
+
+    scheme='collective'         per-layer barriers inside every minibatch
+    scheme='odc'                barrier at every minibatch end (the paper)
+    scheme='odc', staleness=K   bounded-staleness PS (paper §6.2): a device
+                                may start minibatch t as soon as the
+                                *global* barrier for minibatch t-K has
+                                cleared — classic SSP semantics on top of
+                                ODC's decoupled progress.
+    Returns the total wall-clock (seconds) to finish all minibatches.
+    """
+    T = len(steps)
+    if T == 0:
+        return 0.0
+    D = steps[0][0].world_size
+
+    if scheme == "collective" or staleness <= 0:
+        total = 0.0
+        for plan, lens in steps:
+            total += simulate_minibatch(
+                plan, lens, scheme=scheme, cfg=cfg,
+                device_speed=device_speed).makespan
+        return total
+
+    # bounded-staleness ODC: f[d] = device finish time of its current
+    # minibatch; B[t] = time the minibatch-t barrier cleared.
+    busy = []
+    for plan, lens in steps:
+        times = _microbatch_times(plan, lens, cfg)
+        if device_speed is not None:
+            times = [[x / max(device_speed[d], 1e-9) for x in ts]
+                     for d, ts in enumerate(times)]
+        comm_l = cfg.comm.layer_comm_time(D, True) * (1.0 - cfg.overlap)
+        busy.append([sum(ts) + cfg.num_layers * comm_l * len(ts)
+                     for ts in times])
+
+    f = [0.0] * D
+    barrier = [0.0] * (T + 1)
+    for t in range(T):
+        gate = barrier[t - staleness + 1] if t - staleness + 1 >= 0 else 0.0
+        f = [max(f[d], gate) + busy[t][d] for d in range(D)]
+        barrier[t + 1] = max(f)
+    return barrier[T]

@@ -1,0 +1,12 @@
+"""Test-session setup.
+
+jax locks the device count at first init, and pytest imports test modules
+in file order — so the 8-host-device flag the distributed tests need must
+be set before ANY module imports jax.  (This is deliberately 8, not the
+dry-run's 512: only `repro.launch.dryrun` builds the production mesh, in
+its own process.)
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")

@@ -1,0 +1,168 @@
+"""GSPMD/shard_map production-engine tests (8 host devices).
+
+Key semantic claims tested (paper §3, Appendix F):
+  * ODC (p2p comm / minibatch schedule) produces bit-comparable training
+    steps to the collective FSDP baseline — the communication scheme does
+    not change training semantics.
+  * Dense-family distributed steps match a single-device reference.
+  * The collective schedules differ exactly as designed: per-layer
+    all-gather/reduce-scatter vs p2p permute chains vs once-per-minibatch.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_reduced
+from repro.core.gspmd import GSPMDConfig, ShardingRules, make_train_step
+from repro.core.gspmd import build_serve_artifacts, build_train_artifacts
+from repro.launch import hlo as H
+from repro.launch.mesh import make_host_mesh
+from repro.models import transformer as T
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+KEY = jax.random.PRNGKey(0)
+MODES = [("layer", "collective"), ("layer", "odc"),
+         ("minibatch", "collective"), ("minibatch", "odc")]
+
+
+def _mesh():
+    return make_host_mesh(data=4, model=2)
+
+
+def _batch(cfg, M=2, Bm=8, S=32):
+    kb = jax.random.PRNGKey(1)
+    b = {
+        "tokens": jax.random.randint(kb, (M, Bm, S), 0, cfg.vocab_size),
+        "positions": jnp.tile(jnp.arange(S)[None, None], (M, Bm, 1)),
+        "segment_ids": jnp.zeros((M, Bm, S), jnp.int32),
+        "targets": jax.random.randint(kb, (M, Bm, S), 0, cfg.vocab_size),
+        "loss_mask": jnp.ones((M, Bm, S), jnp.float32),
+    }
+    if cfg.family == "audio":
+        b["encoder_embeds"] = jax.random.normal(kb, (M, Bm, 16, cfg.d_model))
+    if cfg.frontend == "vision" and cfg.frontend_tokens:
+        b["vision_embeds"] = jax.random.normal(
+            kb, (M, Bm, cfg.frontend_tokens, cfg.d_model))
+    return b
+
+
+def _run_mode(cfg, mesh, params, batch, sched, comm):
+    gcfg = GSPMDConfig(rules=ShardingRules(), schedule=sched, comm=comm,
+                       block_kv=64)
+    step = make_train_step(cfg, mesh, gcfg, AdamWConfig(lr=1e-2))
+    with mesh:
+        newp, _, metrics = jax.jit(step)(params, adamw_init(params), batch)
+    return newp, metrics
+
+
+@pytest.mark.parametrize("arch", ["gemma2-9b", "mamba2-2.7b", "zamba2-1.2b",
+                                  "seamless-m4t-medium"])
+def test_dense_families_match_single_device_reference(arch):
+    cfg = get_reduced(arch)
+    mesh = _mesh()
+    params = T.init_params(cfg, KEY)
+    batch = _batch(cfg)
+    M = batch["tokens"].shape[0]
+
+    def ref_loss(p):
+        tot, tok = jnp.float32(0), jnp.float32(0)
+        for m in range(M):
+            mb = jax.tree.map(lambda x: x[m], batch)
+            l, met = T.loss(cfg, p, mb, reduction="sum", block_kv=64)
+            tot, tok = tot + l, tok + met["tokens"]
+        return tot / tok
+
+    ref_l = ref_loss(params)
+    ref_g = jax.grad(ref_loss)(params)
+    ref_p, _ = adamw_update(AdamWConfig(lr=1e-2), params, ref_g,
+                            adamw_init(params))
+    for sched, comm in MODES:
+        newp, metrics = _run_mode(cfg, mesh, params, batch, sched, comm)
+        assert abs(float(metrics["loss"]) - float(ref_l)) < 1e-4, (sched, comm)
+        dp = max(float(jnp.max(jnp.abs(a - b)))
+                 for a, b in zip(jax.tree.leaves(newp),
+                                 jax.tree.leaves(ref_p)))
+        assert dp < 2e-3, (sched, comm, dp)
+
+
+@pytest.mark.parametrize("arch", ["llama4-maverick-400b-a17b", "grok-1-314b"])
+def test_odc_matches_collective_baseline_moe(arch):
+    """The paper's semantic claim: ODC == collective FSDP, step for step.
+    (MoE capacity dropping depends on the device-local dispatch groups, so
+    the distributed runs are compared against each other, not against an
+    8-way-batched single-device run.)"""
+    cfg = get_reduced(arch)
+    mesh = _mesh()
+    params = T.init_params(cfg, KEY)
+    batch = _batch(cfg)
+    base_p, base_m = _run_mode(cfg, mesh, params, batch, "layer", "collective")
+    for sched, comm in MODES[1:]:
+        newp, metrics = _run_mode(cfg, mesh, params, batch, sched, comm)
+        assert abs(float(metrics["loss"]) - float(base_m["loss"])) < 1e-5
+        dp = max(float(jnp.max(jnp.abs(a - b)))
+                 for a, b in zip(jax.tree.leaves(newp),
+                                 jax.tree.leaves(base_p)))
+        assert dp < 1e-3, (sched, comm, dp)
+
+
+def test_collective_schedule_structure():
+    """Lowered HLO must show the designed communication schedules."""
+    cfg = get_reduced("gemma2-9b")
+    mesh = _mesh()
+
+    def counts(sched, comm):
+        gcfg = GSPMDConfig(rules=ShardingRules(), schedule=sched, comm=comm,
+                           block_kv=64)
+        batch = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+                 for k, v in _batch(cfg).items()}
+        jitted, args = build_train_artifacts(cfg, mesh, gcfg, batch)
+        cost = H.analyze_hlo_text(jitted.lower(*args).compile().as_text())
+        return cost
+
+    lc = counts("layer", "collective")
+    lo = counts("layer", "odc")
+    mc = counts("minibatch", "collective")
+    # baseline: all-gathers + reduce-scatters present
+    assert lc.coll_count["all-gather"] > 0
+    assert lc.coll_count["reduce-scatter"] > 0
+    # ODC comm: p2p permutes replace the fused collectives entirely
+    assert lo.coll_count["all-gather"] == 0
+    assert lo.coll_count["reduce-scatter"] == 0
+    assert lo.coll_count["collective-permute"] > 0
+    # minibatch schedule: strictly fewer sync points than per-layer
+    assert (mc.coll_count["all-gather"] + mc.coll_count["reduce-scatter"]
+            < lc.coll_count["all-gather"] + lc.coll_count["reduce-scatter"])
+    # identical total p2p volume claim (paper Table 2): ODC moves the same
+    # order of bytes as the collective it replaces (ring AG == p2p chain)
+    assert lo.total_coll_bytes <= 1.1 * lc.total_coll_bytes
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_serve_artifacts_lower(arch):
+    cfg = get_reduced(arch)
+    mesh = _mesh()
+    gcfg = GSPMDConfig(rules=ShardingRules(), block_kv=64)
+    for kind, B, S in [("prefill", 8, 128), ("decode", 8, 128),
+                       ("decode", 1, 256)]:
+        jitted, args = build_serve_artifacts(cfg, mesh, gcfg, kind=kind,
+                                             batch=B, seq_len=S)
+        assert jitted.lower(*args).compile() is not None
+
+
+def test_multipod_flat_and_hybrid_lower():
+    cfg = get_reduced("gemma2-9b")
+    mesh = make_host_mesh(data=2, model=2, pod=2)
+    batch = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+             for k, v in _batch(cfg).items()}
+    for rules, hyb in [
+        (ShardingRules(data=("pod", "data"), model="model", pod=None), False),
+        (ShardingRules(data="data", model="model", pod="pod"), True),
+    ]:
+        gcfg = GSPMDConfig(rules=rules, schedule="minibatch", comm="odc",
+                           hybrid_pod=hyb, block_kv=64)
+        jitted, args = build_train_artifacts(cfg, mesh, gcfg, batch)
+        assert jitted.lower(*args).compile() is not None

@@ -1,0 +1,136 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.balance import STRATEGIES, karmarkar_karp
+from repro.balance.cost import CostModel, get_compute_costs
+from repro.balance.kk import partition_sums
+from repro.data import pack_sequences
+from repro.sim import simulate_minibatch
+
+SETTINGS = dict(max_examples=40, deadline=None)
+
+
+# ===========================================================================
+# Karmarkar–Karp invariants
+# ===========================================================================
+@settings(**SETTINGS)
+@given(
+    costs=st.lists(st.floats(0.1, 1e4), min_size=1, max_size=40),
+    k=st.integers(1, 8),
+)
+def test_kk_partition_is_exact_cover(costs, k):
+    parts = karmarkar_karp(costs, k)
+    assert len(parts) == k
+    seen = sorted(i for p in parts for i in p)
+    assert seen == list(range(len(costs)))
+    # KK max-sum never exceeds (sum + max): trivial upper bound sanity
+    sums = partition_sums(costs, parts)
+    assert max(sums) <= sum(costs) + 1e-6
+    # and is at least the lower bound max(mean, biggest item)
+    assert max(sums) >= max(sum(costs) / k, max(costs)) - 1e-6
+
+
+@settings(**SETTINGS)
+@given(
+    costs=st.lists(st.floats(0.5, 100), min_size=8, max_size=32),
+)
+def test_kk_equal_size_counts(costs):
+    k = 4
+    n = (len(costs) // k) * k
+    parts = karmarkar_karp(costs[:n], k, equal_size=True)
+    counts = sorted(len(p) for p in parts)
+    assert counts[-1] - counts[0] <= 1
+
+
+# ===========================================================================
+# balance-strategy invariants
+# ===========================================================================
+@settings(**SETTINGS)
+@given(
+    lens=st.lists(st.integers(16, 8192), min_size=8, max_size=48),
+    world=st.sampled_from([2, 4, 8]),
+    strategy=st.sampled_from(list(STRATEGIES)),
+)
+def test_plans_cover_and_respect_memory(lens, world, strategy):
+    max_tokens = 8192
+    plan = STRATEGIES[strategy](lens, world, max_tokens)
+    plan.validate(len(lens))
+    for dev in plan.assignments:
+        for mb in dev:
+            assert sum(lens[i] for i in mb) <= max_tokens
+    if strategy != "lb_mini":
+        assert plan.uniform_microbatches()
+
+
+# ===========================================================================
+# simulator invariants: Eq. 1 dominance
+# ===========================================================================
+@settings(**SETTINGS)
+@given(
+    lens=st.lists(st.integers(64, 16384), min_size=8, max_size=32),
+    strategy=st.sampled_from(list(STRATEGIES)),
+)
+def test_odc_makespan_never_exceeds_collective(lens, strategy):
+    """max_d Σ_m t ≤ Σ_m max_d t — ODC's relaxation can only help."""
+    plan = STRATEGIES[strategy](lens, 4, 16_384)
+    t_c = simulate_minibatch(plan, lens, scheme="collective").makespan
+    t_o = simulate_minibatch(plan, lens, scheme="odc").makespan
+    assert t_o <= t_c + 1e-9
+    # and both are at least the busiest device's work
+    busy = simulate_minibatch(plan, lens, scheme="odc").device_busy
+    assert t_o >= max(busy) - 1e-6
+
+
+# ===========================================================================
+# packing invariants
+# ===========================================================================
+@settings(**SETTINGS)
+@given(
+    sizes=st.lists(st.integers(1, 64), min_size=0, max_size=6),
+)
+def test_packing_roundtrip(sizes):
+    buffer_len = max(sum(sizes), 1)
+    rng = np.random.RandomState(0)
+    toks = [rng.randint(1, 1000, size=s).astype(np.int32) for s in sizes]
+    out = pack_sequences(toks, buffer_len)
+    # every real token present, in order, with per-segment positions
+    cur = 0
+    for seg, t in enumerate(toks):
+        got = out["tokens"][cur: cur + len(t)]
+        np.testing.assert_array_equal(got, t)
+        np.testing.assert_array_equal(
+            out["positions"][cur: cur + len(t)], np.arange(len(t)))
+        assert (out["segment_ids"][cur: cur + len(t)] == seg).all()
+        cur += len(t)
+    # loss mask is zero on padding and on each segment's last token
+    assert out["loss_mask"][cur:].sum() == 0
+    assert float(out["loss_mask"].sum()) == sum(max(s - 1, 0) for s in sizes)
+
+
+# ===========================================================================
+# cost-model invariants
+# ===========================================================================
+@settings(**SETTINGS)
+@given(s=st.integers(1, 100_000))
+def test_cost_model_monotone_and_superlinear(s):
+    cm = CostModel()
+    assert cm.sample_cost(s + 1) > cm.sample_cost(s)
+    # quadratic: cost(2s) > 2*cost(s) for full attention
+    assert cm.sample_cost(2 * s) > 2 * cm.sample_cost(s) - 1e-6
+    # attention-free is exactly linear
+    lin = CostModel(attention_free=True)
+    assert abs(lin.sample_cost(2 * s) - 2 * lin.sample_cost(s)) < 1e-6
+
+
+@settings(**SETTINGS)
+@given(s=st.integers(1024, 100_000))
+def test_cost_model_window_caps_quadratic(s):
+    full = CostModel()
+    win = CostModel(window=1024)
+    assert win.sample_cost(s) <= full.sample_cost(s) + 1e-6

@@ -1,0 +1,56 @@
+"""Assigned input shapes, applicability rules and input_specs builders."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.shapes import (SHAPES, input_specs, shape_applicable,
+                                 train_batch_shapes)
+
+LONG_RUNNERS = {"gemma2_9b", "gemma3_27b", "mamba2_2p7b", "zamba2_1p2b"}
+
+
+def test_assigned_shapes_exact():
+    assert SHAPES["train_4k"].seq_len == 4_096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].seq_len == 32_768
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].seq_len == 32_768
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524_288
+    assert SHAPES["long_500k"].global_batch == 1
+    assert SHAPES["decode_32k"].kind == "decode"
+    assert SHAPES["long_500k"].kind == "decode"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_long_context_applicability(arch):
+    cfg = get_config(arch)
+    applicable = shape_applicable(cfg, SHAPES["long_500k"])
+    assert applicable == (arch in LONG_RUNNERS or cfg.family in
+                          ("ssm", "hybrid"))
+    # every arch runs the other three shapes
+    for s in ("train_4k", "prefill_32k", "decode_32k"):
+        assert shape_applicable(cfg, SHAPES[s])
+
+
+@pytest.mark.parametrize("arch", ["gemma2_9b", "seamless_m4t_medium",
+                                  "llama4_maverick_400b_a17b"])
+def test_train_batch_shapes_cover_modalities(arch):
+    cfg = get_config(arch)
+    b = train_batch_shapes(cfg, SHAPES["train_4k"], dp_size=16)
+    M, Bm, S = b["tokens"].shape
+    assert M * Bm == 256 and S == 4_096
+    assert Bm % 16 == 0  # divisible by the dp axis
+    if cfg.family == "audio":
+        assert b["encoder_embeds"].shape == (M, Bm, S, cfg.d_model)
+    if cfg.frontend == "vision":
+        assert b["vision_embeds"].shape[2] == cfg.frontend_tokens
+
+
+def test_input_specs_entrypoint():
+    cfg = get_config("qwen_1p5b")
+    t = input_specs(cfg, "train_4k")
+    assert isinstance(t["tokens"], jax.ShapeDtypeStruct)
+    d = input_specs(cfg, "decode_32k")
+    assert d == {"batch": 128, "seq_len": 32_768, "kind": "decode"}
