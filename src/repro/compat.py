@@ -1,0 +1,151 @@
+"""Version portability for the JAX APIs this repo relies on.
+
+The engine is written against the current jax API (``jax.shard_map``,
+``jax.lax.axis_size``, pallas ``sync_copy`` / ``CompilerParams``); the
+container this repro is validated on ships jax 0.4.37, where those names
+live elsewhere or do not exist.  Everything version-dependent is funneled
+through this module so the rest of the codebase reads like modern jax:
+
+  shard_map(...)         jax.shard_map, or jax.experimental.shard_map with
+                         check_vma->check_rep and axis_names->auto mapped
+  axis_size(name)        jax.lax.axis_size, or the psum-of-1 literal trick
+                         (static at trace time inside shard_map)
+  get_abstract_mesh()    jax.sharding.get_abstract_mesh, or None (callers
+                         fall back to the concrete mesh)
+  sync_copy(src, dst, sem)        pallas: pltpu.sync_copy, or a start+wait
+                                  make_async_copy pair (needs a DMA sem)
+  interpret_params(on)            pallas_call interpret= value
+  tpu_compiler_params(**kw)       CompilerParams/TPUCompilerParams, dropping
+                                  kwargs the installed version rejects
+  remote_device_id(idx)           (idx,)+MESH on new jax, idx+LOGICAL on old
+  supports_remote_semaphore_signal()   False where the interpret-mode
+                                  discharge rule raises NotImplementedError
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+
+# Resolved at import time so that aliasing ``jax.shard_map = compat.shard_map``
+# (tests/conftest.py does this on old jax) cannot make the shim recurse.
+_NATIVE_SHARD_MAP = getattr(jax, "shard_map", None)
+
+
+# ===========================================================================
+# shard_map
+# ===========================================================================
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True,
+              axis_names=None):
+    """``jax.shard_map``-compatible wrapper.
+
+    ``axis_names`` (new API): the *manual* axes.  On old jax this maps to
+    ``auto`` = every mesh axis NOT in ``axis_names``.
+    """
+    if _NATIVE_SHARD_MAP is not None:
+        kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=check_vma)
+        if axis_names is not None:
+            kwargs["axis_names"] = set(axis_names)
+        return _NATIVE_SHARD_MAP(f, **kwargs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    auto = frozenset()
+    if axis_names is not None:
+        auto = frozenset(a for a in mesh.axis_names if a not in set(axis_names))
+    # Old XLA hard-crashes (IsManualSubgroup CHECK) when a manual region
+    # leaves some mesh axes auto; a size-1 auto axis carries no sharding,
+    # so fold those into the manual set.  Axes of size > 1 are passed
+    # through (and will only work on jax versions with working
+    # partial-auto SPMD — see supports_partial_auto()).
+    auto = frozenset(a for a in auto if mesh.shape[a] > 1)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma, auto=auto)
+
+
+def supports_partial_auto() -> bool:
+    """Whether shard_map can leave some mesh axes to GSPMD (tensor
+    parallelism under a manual FSDP region).  Old XLA's SPMD partitioner
+    CHECK-fails on manual-subgroup shardings, so tests fall back to a
+    pure-FSDP (model=1) mesh there."""
+    return _NATIVE_SHARD_MAP is not None
+
+
+# ===========================================================================
+# named-axis helpers
+# ===========================================================================
+def axis_size(axis_name) -> int:
+    """Static size of (possibly a tuple of) named mesh axes, usable for
+    shape arithmetic at trace time inside shard_map."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return int(jax.lax.psum(1, axis_name))
+
+
+def get_abstract_mesh():
+    """The tracing-context mesh, or None where the concept doesn't exist
+    (callers then constrain against the concrete mesh)."""
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    return fn() if fn is not None else None
+
+
+# ===========================================================================
+# pallas TPU
+# ===========================================================================
+def sync_copy(src_ref, dst_ref, sem=None):
+    """Blocking local copy inside a pallas kernel.  New jax has
+    ``pltpu.sync_copy``; old jax needs an explicit DMA semaphore (pass one
+    scratch ``SemaphoreType.DMA`` per kernel and thread it through)."""
+    from jax.experimental.pallas import tpu as pltpu
+    if hasattr(pltpu, "sync_copy"):
+        return pltpu.sync_copy(src_ref, dst_ref)
+    assert sem is not None, "old-jax sync_copy needs a DMA semaphore"
+    copy = pltpu.make_async_copy(src_ref, dst_ref, sem)
+    copy.start()
+    copy.wait()
+
+
+def interpret_params(interpret: bool):
+    """Value for ``pl.pallas_call(interpret=...)``."""
+    from jax.experimental.pallas import tpu as pltpu
+    if not interpret:
+        return False
+    if hasattr(pltpu, "InterpretParams"):
+        return pltpu.InterpretParams()
+    return True
+
+
+def tpu_compiler_params(**kwargs) -> Optional[Any]:
+    """CompilerParams across renames; drops unsupported kwargs (e.g.
+    ``collective_id`` is ignored by interpret mode anyway)."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None) or \
+        getattr(pltpu, "TPUCompilerParams", None)
+    if cls is None:
+        return None
+    try:
+        return cls(**kwargs)
+    except TypeError:
+        return cls()
+
+
+def remote_device_id(idx):
+    """(device_id, device_id_type) for make_async_remote_copy /
+    semaphore_signal.  New jax takes a mesh-coordinate tuple; old jax's
+    interpret-mode discharge rule only understands a scalar LOGICAL id."""
+    from jax.experimental.pallas import tpu as pltpu
+    if hasattr(pltpu, "sync_copy"):  # proxy for the new pallas API surface
+        return (idx,), pltpu.DeviceIdType.MESH
+    return idx, pltpu.DeviceIdType.LOGICAL
+
+
+@functools.lru_cache(None)
+def supports_remote_semaphore_signal(interpret: bool) -> bool:
+    """Old jax's interpret mode raises NotImplementedError on remote
+    semaphore signals; the credit-based backpressure in the ODC kernels is
+    gated off there (interpret execution is synchronous, so the credits
+    are semantically redundant — they only matter on real hardware)."""
+    if not interpret:
+        return True
+    from jax.experimental.pallas import tpu as pltpu
+    return hasattr(pltpu, "sync_copy")

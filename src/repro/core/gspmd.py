@@ -30,6 +30,20 @@ where parameter-gather / gradient-scatter collectives are placed:
                         2·L·M to 2·L; the synchronization barrier moves to
                         the minibatch boundary.
 
+  schedule='overlap'    Overlapped ODC — per-layer gathers like 'layer',
+                        but software-pipelined: the layer scan carries a
+                        one-slot-ahead prefetch (``odc.prefetch_scan``),
+                        so layer l+1's p2p gather chain is issued before
+                        layer l's matmuls and has no data dependence on
+                        them; the backward mirrors it (layer l+1's
+                        scatter-accumulate is issued during layer l's
+                        backward).  Values are identical to 'minibatch' /
+                        'layer' (same gathers and scatter-accumulates,
+                        different issue order); what changes is the HLO
+                        schedule the latency-hiding scheduler sees.
+                        ``repro.sim`` (scheme='overlap') charges the
+                        timing: comm only where it exceeds compute.
+
   hybrid_pod=True       ZeRO++-style hybrid sharding (paper §6.1/App. E) on
                         the multi-pod mesh: parameter gather/scatter stays
                         *intra-pod* (params never sharded over ``pod``), and
@@ -51,6 +65,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.optim import AdamWConfig, adamw_init, adamw_update
@@ -356,7 +371,10 @@ def cache_pspecs(cache, rules: ShardingRules, mesh: Mesh, *,
 @dataclasses.dataclass(frozen=True)
 class GSPMDConfig:
     rules: ShardingRules = ShardingRules()
-    schedule: str = "minibatch"  # 'layer' (FSDP baseline) | 'minibatch' (ODC)
+    schedule: str = "minibatch"  # 'layer' (FSDP baseline) | 'minibatch'
+    #                              (ODC) | 'overlap' (ODC + double-buffered
+    #                              prefetch: gather l+1 under layer l's
+    #                              compute, scatter l under l-1's backward)
     comm: str = "collective"  # 'collective' (fused AG/RS) | 'odc' (p2p ring)
     hybrid_pod: bool = False  # ZeRO++-style: params not sharded over pod
     moe_ep: str = "none"  # 'none' (FSDP gather, baseline) | 'data'
@@ -414,6 +432,8 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, gcfg: GSPMDConfig,
     scatter-accumulates are explicit, with the (comm, schedule) knobs of the
     paper.  The ``model`` axis stays automatic (GSPMD tensor parallelism).
     """
+    if gcfg.schedule not in ("layer", "minibatch", "overlap"):
+        raise ValueError(f"unknown schedule {gcfg.schedule!r}")
     rules = gcfg.rules
     from repro.core import odc
 
@@ -441,6 +461,14 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, gcfg: GSPMDConfig,
     # shared-expert w_up (ndim 3) would collide with the sliced MoE expert
     # w_up (logical ndim 3).
     logical_specs = {}
+    # Partially-sliced keys for super-layer subtrees (stack rank >= 2, e.g.
+    # a MoE period block's dense sub-stack or a hybrid super-layer): the
+    # overlap prefetch materializes a WHOLE scan slice one iteration ahead,
+    # so its leaves still carry the inner stack dim.  Kept separate from
+    # logical_specs — merging them would make the top-level pxform gather
+    # fully-stacked rank-1 leaves that happen to share (parent, name, ndim)
+    # with a once-sliced rank-2 leaf (e.g. the stacked MoE-block attn wq).
+    sliced_specs = {}
 
     def _relative_keys(keys):
         ks = list(keys)
@@ -457,6 +485,9 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, gcfg: GSPMDConfig,
         r = _stack_rank_for_path(path)
         parent = keys[-2] if len(keys) >= 2 else ""
         logical_specs[(parent, keys[-1], leaf.ndim - r)] = P(*list(spec)[r:])
+        for d in range(1, r):  # stack dims carry no sharding (spec prefix
+            sliced_specs[(parent, keys[-1], leaf.ndim - d)] = \
+                P(*list(spec)[d:])  # is None), so dropping entries is exact
 
     jax.tree_util.tree_map_with_path(_register, params_shape, pspecs)
 
@@ -472,20 +503,24 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, gcfg: GSPMDConfig,
         if _axes_in_spec(auto):
             # use the context (abstract) mesh: inside shard_map the data
             # axes are Manual and a concrete-mesh NamedSharding would not
-            # match the tracing context.
-            ctx = jax.sharding.get_abstract_mesh()
-            target = ctx if ctx is not None and ctx.shape else mesh
-            leaf = jax.lax.with_sharding_constraint(
-                leaf, NamedSharding(target, auto))
+            # match the tracing context.  Old jax has no abstract mesh AND
+            # its XLA hard-crashes (IsManualSubgroup check) on sharding
+            # constraints inside a partially-manual region — the anchor is
+            # a performance hint, so it is skipped there and GSPMD infers
+            # the model-axis sharding on its own.
+            ctx = compat.get_abstract_mesh()
+            if ctx is not None and ctx.shape:
+                leaf = jax.lax.with_sharding_constraint(
+                    leaf, NamedSharding(ctx, auto))
         return leaf
 
     def _constrain_auto(leaf, spec):
         auto = _drop_axis(spec, manual)
         if _axes_in_spec(auto):
-            ctx = jax.sharding.get_abstract_mesh()
-            target = ctx if ctx is not None and ctx.shape else mesh
-            leaf = jax.lax.with_sharding_constraint(
-                leaf, NamedSharding(target, auto))
+            ctx = compat.get_abstract_mesh()
+            if ctx is not None and ctx.shape:
+                leaf = jax.lax.with_sharding_constraint(
+                    leaf, NamedSharding(ctx, auto))
         return leaf
 
     def gather_full(params_local):
@@ -519,10 +554,45 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, gcfg: GSPMDConfig,
 
         return jax.tree_util.tree_map_with_path(mat, tree)
 
-    def loss_sum(p, mb, px):
+    def pxform_overlap(tree):
+        """schedule='overlap' prefetch hook: materialize EVERY leaf of a
+        one-iteration scan slice (``odc.prefetch_scan`` applies this to
+        layer l+1's shards while layer l computes).  Unlike the 'layer'
+        hook it must also gather leaves that still carry an inner stack
+        dim (super-layer sub-stacks), via ``sliced_specs``."""
+
+        def candidates(raw):
+            out = [raw, _relative_keys(raw)]
+            if len(raw) > 1 and raw[0] in ("dense", "moe"):
+                # slice-rooted paths keep the super-layer block container
+                # that registration (rooted at the full tree) stripped
+                out.append(raw[1:])
+            return out
+
+        def mat(path, leaf):
+            raw = [k.key for k in path if hasattr(k, "key")]
+            if not raw:
+                return leaf
+            for keys in candidates(raw):
+                if not keys:
+                    continue
+                parent = keys[-2] if len(keys) >= 2 else ""
+                spec = logical_specs.get((parent, keys[-1], leaf.ndim))
+                if spec is None:
+                    spec = sliced_specs.get((parent, keys[-1], leaf.ndim))
+                if spec is not None:
+                    if _is_stationary_expert(keys):
+                        return _constrain_auto(leaf, spec)
+                    return _gather_leaf(leaf, spec)
+            return leaf
+
+        return jax.tree_util.tree_map_with_path(mat, tree)
+
+    def loss_sum(p, mb, px, prefetch=None):
         val, metrics = T.loss(
             cfg, p, mb, remat=gcfg.remat, block_kv=gcfg.block_kv,
-            moe_groups=gcfg.moe_groups, pxform=px, reduction="sum",
+            moe_groups=gcfg.moe_groups, pxform=px, prefetch=prefetch,
+            reduction="sum",
         )
         return val, metrics["tokens"]
 
@@ -553,10 +623,16 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, gcfg: GSPMDConfig,
             (lsum, tok), grads = jax.value_and_grad(
                 total_loss, has_aux=True)(params_local)
         else:
-            # FSDP baseline: per-layer gather in fwd + per-layer
+            # FSDP baseline ('layer'): per-layer gather in fwd + per-layer
             # scatter-accumulate in bwd, once per microbatch (Fig. 1).
+            # 'overlap' keeps that structure but software-pipelines it:
+            # the prefetch hook materializes layer l+1 inside iteration l
+            # (and AD then defers layer l+1's scatter into layer l's
+            # backward) — same ops, overlap-friendly issue order.
+            prefetch = pxform_overlap if gcfg.schedule == "overlap" else None
             gfun = jax.value_and_grad(
-                lambda pl, mb: loss_sum(pl, mb, pxform), has_aux=True)
+                lambda pl, mb: loss_sum(pl, mb, pxform, prefetch),
+                has_aux=True)
 
             def body(carry, mb):
                 lsum, tok, gacc = carry
@@ -589,7 +665,7 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, gcfg: GSPMDConfig,
 
     def step(params, opt_state, batch):
         from repro.models import moe as moe_mod
-        sharded = jax.shard_map(
+        sharded = compat.shard_map(
             grad_minibatch,
             mesh=mesh,
             in_specs=(manual_pspecs, batch_manual_specs(batch)),

@@ -88,7 +88,8 @@ class FSDPTrainer:
                                 *([None] * (x.ndim - 2))),
                     batch,
                 )
-            sharded_grad = jax.shard_map(
+            from repro import compat
+            sharded_grad = compat.shard_map(
                 grad_fn,
                 mesh=mesh,
                 in_specs=(sspecs, bspecs),

@@ -1,7 +1,12 @@
 """Pallas TPU kernels (validated on CPU with interpret mode).
 
-  odc_gather       one-sided remote-DMA ring *gather* (paper Fig. 5 left)
-  odc_scatter      one-sided remote-DMA ring *scatter-accumulate* (right)
+  odc_gather       one-sided remote-DMA ring *gather* (paper Fig. 5 left);
+                   ``odc_gather_layers`` chains L rings through one
+                   double-buffered staging pair — the cross-layer prefetch
+                   behind ``schedule='overlap'``
+  odc_scatter      one-sided remote-DMA ring *scatter-accumulate* (right);
+                   ``odc_scatter_accumulate_layers`` is its cross-layer
+                   twin (async gradient pushes, no inter-layer barrier)
   gather_matmul    ODC gather fused with the consumer matmul — the §6.1
                    "overlap communication with computation" realized at
                    kernel level (collective-matmul pattern)

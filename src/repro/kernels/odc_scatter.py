@@ -6,6 +6,17 @@ remote DMA into the receiver's staging slot and the "daemon" is simply the
 owner's own accumulate after the pairwise semaphore fires — no host
 involvement, no global barrier.  After n-1 hops every device holds the
 fully-accumulated sum for the chunk it owns.
+
+``odc_scatter_accumulate_layers_pallas`` extends the two-slot staging
+buffer across a stacked (L, n, c, ...) input: the ring chains of
+consecutive layers share the staging slots through one global hop counter,
+so layer l's pushes start while layer l+1's are still draining — the
+backward-side twin of the cross-layer gather prefetch
+(``schedule='overlap'`` issues layer l's scatter during layer l-1's
+backward).
+
+Credit-based backpressure only runs on real TPU — interpret mode executes
+hops synchronously and lacks remote semaphore signals.
 """
 from __future__ import annotations
 
@@ -16,60 +27,65 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 
 def _scatter_kernel(x_ref, out_ref, acc_ref, stage_ref, send_sem, recv_sem,
-                    credit_sem, axis_name):
-    num = jax.lax.axis_size(axis_name)
+                    credit_sem, copy_sem, *, num, axis_name, with_credits):
     me = jax.lax.axis_index(axis_name)
-    right = jax.lax.rem(me + 1, num)
+    dev_right, dev_type = compat.remote_device_id(jax.lax.rem(me + 1, num))
     left = jax.lax.rem(me - 1 + num, num)
 
     # start with my contribution for the chunk owned by my left neighbor
     first = jax.lax.rem(me - 1 + num, num)
-    pltpu.sync_copy(x_ref.at[first], acc_ref)
+    compat.sync_copy(x_ref.at[first], acc_ref, copy_sem)
 
     def hop(h, _):
         slot = jax.lax.rem(h, 2)
 
-        @pl.when(h >= 3)  # two staging slots = two hops of slack
-        def _backpressure():
-            pltpu.semaphore_wait(credit_sem, 1)
+        if with_credits:
+            @pl.when(h >= 3)  # two staging slots = two hops of slack
+            def _backpressure():
+                pltpu.semaphore_wait(credit_sem, 1)
 
         rdma = pltpu.make_async_remote_copy(
             src_ref=acc_ref,
             dst_ref=stage_ref.at[slot],
             send_sem=send_sem.at[slot],
             recv_sem=recv_sem.at[slot],
-            device_id=(right,),
-            device_id_type=pltpu.DeviceIdType.MESH,
+            device_id=dev_right,
+            device_id_type=dev_type,
         )
         rdma.start()
         rdma.wait()
         # owner-side accumulate (the paper's daemon, sans daemon): add my
         # own contribution for the chunk that just arrived
         chunk = jax.lax.rem(me - 1 - h + num, num)
-        pltpu.sync_copy(x_ref.at[chunk], acc_ref)
+        compat.sync_copy(x_ref.at[chunk], acc_ref, copy_sem)
         acc_ref[...] = acc_ref[...] + stage_ref[slot]
 
-        @pl.when(h <= num - 3)
-        def _credit():  # stage[slot] consumed — left may overwrite it
-            pltpu.semaphore_signal(credit_sem, 1, device_id=left,
-                                   device_id_type=pltpu.DeviceIdType.MESH)
+        if with_credits:
+            @pl.when(h <= num - 3)
+            def _credit():  # stage[slot] consumed — left may overwrite it
+                pltpu.semaphore_signal(credit_sem, 1, device_id=left,
+                                       device_id_type=dev_type)
 
         return 0
 
     jax.lax.fori_loop(1, num, hop, 0, unroll=False)
-    pltpu.sync_copy(acc_ref, out_ref)
+    compat.sync_copy(acc_ref, out_ref, copy_sem)
 
 
 def odc_scatter_accumulate_pallas(y, *, axis_name: str,
                                   interpret: bool = True):
     """y: full-size local contribution (n, c, ...) inside shard_map ->
     (c, ...): the accumulated sum of chunk ``me`` over all devices."""
-    n = jax.lax.axis_size(axis_name)
+    n = compat.axis_size(axis_name)
     assert y.shape[0] == n, (y.shape, n)
     chunk_shape = y.shape[1:]
-    kernel = functools.partial(_scatter_kernel, axis_name=axis_name)
+    kernel = functools.partial(
+        _scatter_kernel, num=n, axis_name=axis_name,
+        with_credits=compat.supports_remote_semaphore_signal(interpret))
     return pl.pallas_call(
         kernel,
         out_shape=jax.ShapeDtypeStruct(chunk_shape, y.dtype),
@@ -81,7 +97,95 @@ def odc_scatter_accumulate_pallas(y, *, axis_name: str,
             pltpu.SemaphoreType.DMA((2,)),
             pltpu.SemaphoreType.DMA((2,)),
             pltpu.SemaphoreType.REGULAR,
+            pltpu.SemaphoreType.DMA,
         ],
-        compiler_params=pltpu.CompilerParams(collective_id=1),
-        interpret=(pltpu.InterpretParams() if interpret else False),
+        compiler_params=compat.tpu_compiler_params(collective_id=1),
+        interpret=compat.interpret_params(interpret),
+    )(y)
+
+
+def _scatter_layers_kernel(x_ref, out_ref, acc_ref, stage_ref, send_sem,
+                           recv_sem, credit_sem, copy_sem, *, num, layers,
+                           axis_name, with_credits):
+    """Chained scatter-accumulate rings over (L, n, c, ...) contributions.
+
+    The accumulator is reinitialized per layer (its previous send has
+    completed by then — rdma.wait is the producer/consumer handoff); the
+    staging slots are indexed by a global hop counter t so consecutive
+    layers' pushes interleave through the same double buffer.
+    """
+    me = jax.lax.axis_index(axis_name)
+    dev_right, dev_type = compat.remote_device_id(jax.lax.rem(me + 1, num))
+    left = jax.lax.rem(me - 1 + num, num)
+    hops_total = layers * (num - 1)
+    first = jax.lax.rem(me - 1 + num, num)
+
+    def layer(l, _):
+        compat.sync_copy(x_ref.at[l, first], acc_ref, copy_sem)
+
+        def hop(h, _):
+            t = l * (num - 1) + h - 1  # global hop counter
+            slot = jax.lax.rem(t, 2)
+
+            if with_credits:
+                @pl.when(t >= 2)
+                def _backpressure():
+                    pltpu.semaphore_wait(credit_sem, 1)
+
+            rdma = pltpu.make_async_remote_copy(
+                src_ref=acc_ref,
+                dst_ref=stage_ref.at[slot],
+                send_sem=send_sem.at[slot],
+                recv_sem=recv_sem.at[slot],
+                device_id=dev_right,
+                device_id_type=dev_type,
+            )
+            rdma.start()
+            rdma.wait()
+            chunk = jax.lax.rem(me - 1 - h + num, num)
+            compat.sync_copy(x_ref.at[l, chunk], acc_ref, copy_sem)
+            acc_ref[...] = acc_ref[...] + stage_ref[slot]
+
+            if with_credits:
+                @pl.when(t <= hops_total - 3)
+                def _credit():
+                    pltpu.semaphore_signal(credit_sem, 1, device_id=left,
+                                           device_id_type=dev_type)
+
+            return 0
+
+        jax.lax.fori_loop(1, num, hop, 0, unroll=False)
+        compat.sync_copy(acc_ref, out_ref.at[l], copy_sem)
+        return 0
+
+    jax.lax.fori_loop(0, layers, layer, 0)
+
+
+def odc_scatter_accumulate_layers_pallas(y, *, axis_name: str,
+                                         interpret: bool = True):
+    """y: stacked contributions (L, n, c, ...) inside shard_map ->
+    (L, c, ...): each layer's owned chunk, accumulated over all devices,
+    with the L rings chained through one double-buffered staging pair."""
+    n = compat.axis_size(axis_name)
+    assert y.shape[1] == n, (y.shape, n)
+    L = y.shape[0]
+    chunk_shape = y.shape[2:]
+    kernel = functools.partial(
+        _scatter_layers_kernel, num=n, layers=L, axis_name=axis_name,
+        with_credits=compat.supports_remote_semaphore_signal(interpret))
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((L,) + chunk_shape, y.dtype),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=pl.BlockSpec(memory_space=pl.ANY),
+        scratch_shapes=[
+            pltpu.VMEM(chunk_shape, y.dtype),
+            pltpu.VMEM((2,) + chunk_shape, y.dtype),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.REGULAR,
+            pltpu.SemaphoreType.DMA,
+        ],
+        compiler_params=compat.tpu_compiler_params(collective_id=1),
+        interpret=compat.interpret_params(interpret),
     )(y)

@@ -12,8 +12,11 @@ import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.gather_matmul import gather_matmul_pallas
-from repro.kernels.odc_gather import odc_gather_pallas
-from repro.kernels.odc_scatter import odc_scatter_accumulate_pallas
+from repro.kernels.odc_gather import odc_gather_layers_pallas, odc_gather_pallas
+from repro.kernels.odc_scatter import (
+    odc_scatter_accumulate_layers_pallas,
+    odc_scatter_accumulate_pallas,
+)
 from repro.kernels.ssd_scan import ssd_scan_pallas
 
 
@@ -35,11 +38,38 @@ def odc_scatter_accumulate(y, axis_name: str, *, interpret=None):
     """Inside shard_map: (n*c, ...) local contribution -> (c, ...) owned,
     fully-accumulated chunk."""
     interpret = (not _on_tpu()) if interpret is None else interpret
-    n = jax.lax.axis_size(axis_name)
+    from repro import compat
+    n = compat.axis_size(axis_name)
     c = y.shape[0] // n
     stacked = y.reshape((n, c) + y.shape[1:])
     return odc_scatter_accumulate_pallas(stacked, axis_name=axis_name,
                                          interpret=interpret)
+
+
+def odc_gather_layers(x_stacked, axis_name: str, *, interpret=None):
+    """Inside shard_map: (L, c, ...) stacked local shards -> (L, n*c, ...)
+    per-layer full tensors.  The L ring chains share one double-buffered
+    staging pair (cross-layer prefetch, schedule='overlap')."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    stacked = odc_gather_layers_pallas(x_stacked, axis_name=axis_name,
+                                       interpret=interpret)
+    L, n, c = stacked.shape[0], stacked.shape[1], stacked.shape[2]
+    return stacked.reshape((L, n * c) + stacked.shape[3:])
+
+
+def odc_scatter_accumulate_layers(y_stacked, axis_name: str, *,
+                                  interpret=None):
+    """Inside shard_map: (L, n*c, ...) stacked contributions -> (L, c, ...)
+    owned, fully-accumulated chunks, with the L scatter rings chained
+    through one double-buffered staging pair."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    from repro import compat
+    n = compat.axis_size(axis_name)
+    L, full = y_stacked.shape[0], y_stacked.shape[1]
+    c = full // n
+    stacked = y_stacked.reshape((L, n, c) + y_stacked.shape[2:])
+    return odc_scatter_accumulate_layers_pallas(stacked, axis_name=axis_name,
+                                                interpret=interpret)
 
 
 def gather_matmul(x, w_shard, axis_name: str, *, interpret=None):

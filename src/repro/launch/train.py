@@ -63,7 +63,10 @@ def main(argv=None):
     ap.add_argument("--strategy", default="lb_mini",
                     choices=("local_sort", "lb_micro", "lb_mini"))
     ap.add_argument("--schedule", default="minibatch",
-                    choices=("layer", "minibatch"))
+                    choices=("layer", "minibatch", "overlap"),
+                    help="'overlap' = ODC with double-buffered parameter "
+                         "prefetch (gather layer l+1 under layer l's "
+                         "compute; scatter l under l-1's backward)")
     ap.add_argument("--comm", default="odc", choices=("collective", "odc"))
     ap.add_argument("--steps", type=int, default=20)
     ap.add_argument("--minibatch-per-device", type=int, default=4)

@@ -17,6 +17,13 @@ Layer trunks are ``lax.scan`` over stacked layer params (fast compiles at
 40-64 layers).  MoE archs scan over "super-layers" of ``moe_period`` layers
 ((period-1) dense + 1 MoE), so dense and MoE layers can carry different
 parameter structures while the scan stays uniform.
+
+``pxform`` is the FSDP hook: a transform applied to parameter subtrees at
+materialization points (per-layer inside the scan bodies, or once at the
+top for global leaves).  ``prefetch`` (training only) switches the layer
+scans to the software-pipelined ``odc.prefetch_scan``: the transform is
+applied to layer l+1's slice during layer l's compute — the
+``schedule='overlap'`` double-buffered gather/scatter discipline.
 """
 from __future__ import annotations
 
@@ -183,11 +190,32 @@ def _embed(cfg, params, batch):
     return x
 
 
-def _forward_dense(cfg, params, batch, caches, cache_index, remat, block_kv, pxform):
+def _prefetch_scan(*args, **kwargs):
+    # lazy: repro.core's __init__ imports this module, so a top-level
+    # import of repro.core.odc would be circular
+    from repro.core.odc import prefetch_scan
+    return prefetch_scan(*args, **kwargs)
+
+
+def _forward_dense(cfg, params, batch, caches, cache_index, remat, block_kv,
+                   pxform, prefetch=None):
     x = _embed(cfg, params, batch)
     positions = batch.get("positions")
     segment_ids = batch.get("segment_ids")
     windows = _window_schedule(cfg)
+
+    if prefetch is not None:
+        def pbody(x, scanned):
+            lp, window = scanned  # lp already materialized one slot ahead
+            return _apply_dense_block(
+                cfg, lp, x, window=window, positions=positions,
+                segment_ids=segment_ids, cache=None,
+                cache_index=cache_index, block_kv=block_kv,
+            )
+
+        x, _ = _prefetch_scan(pbody, x, params["layers"], (windows,),
+                              prefetch=prefetch, remat=remat)
+        return x, jnp.float32(0.0), None
 
     def body(x, scanned):
         if caches is None:
@@ -209,12 +237,38 @@ def _forward_dense(cfg, params, batch, caches, cache_index, remat, block_kv, pxf
     return x, jnp.float32(0.0), new_caches
 
 
-def _forward_moe(cfg, params, batch, caches, cache_index, remat, block_kv, moe_groups, pxform):
+def _forward_moe(cfg, params, batch, caches, cache_index, remat, block_kv,
+                 moe_groups, pxform, prefetch=None):
     x = _embed(cfg, params, batch)
     positions = batch.get("positions")
     segment_ids = batch.get("segment_ids")
     P = cfg.moe_period
     blocks = params["layers"]
+
+    if prefetch is not None:
+        def pbody(carry, scanned):
+            x, aux = carry
+            (lp,) = scanned  # whole super-layer slice, pre-materialized
+            if P > 1:
+                for j in range(P - 1):
+                    sub = jax.tree.map(lambda a: a[j], lp["dense"])
+                    x, _ = _apply_dense_block(
+                        cfg, sub, x, window=0, positions=positions,
+                        segment_ids=segment_ids, cache=None,
+                        cache_index=cache_index, block_kv=block_kv,
+                    )
+            x, _, aux_l = _apply_moe_block(
+                cfg, lp["moe"], x, window=0, positions=positions,
+                segment_ids=segment_ids, cache=None,
+                cache_index=cache_index, block_kv=block_kv,
+                moe_groups=moe_groups,
+            )
+            return (x, aux + aux_l), None
+
+        (x, aux), _ = _prefetch_scan(
+            pbody, (x, jnp.float32(0.0)), blocks, (),
+            prefetch=prefetch, remat=remat)
+        return x, aux, None
 
     def body(carry, scanned):
         x, aux = carry
@@ -255,8 +309,17 @@ def _forward_moe(cfg, params, batch, caches, cache_index, remat, block_kv, moe_g
     return x, aux, new_caches
 
 
-def _forward_ssm(cfg, params, batch, caches, remat, pxform):
+def _forward_ssm(cfg, params, batch, caches, remat, pxform, prefetch=None):
     x = _embed(cfg, params, batch)
+
+    if prefetch is not None:
+        def pbody(x, scanned):
+            (lp,) = scanned
+            return _apply_mamba_block(cfg, lp, x, cache=None)
+
+        x, _ = _prefetch_scan(pbody, x, params["layers"], (),
+                              prefetch=prefetch, remat=remat)
+        return x, jnp.float32(0.0), None
 
     def body(x, scanned):
         if caches is None:
@@ -273,13 +336,39 @@ def _forward_ssm(cfg, params, batch, caches, remat, pxform):
     return x, jnp.float32(0.0), new_caches
 
 
-def _forward_hybrid(cfg, params, batch, caches, cache_index, remat, block_kv, pxform):
+def _forward_hybrid(cfg, params, batch, caches, cache_index, remat, block_kv,
+                    pxform, prefetch=None):
     x = _embed(cfg, params, batch)
     positions = batch.get("positions")
     segment_ids = batch.get("segment_ids")
     P = cfg.hybrid_attn_period
     shared = params["shared_attn"]
     no_cache = caches is None
+
+    if prefetch is not None:
+        def pbody(x, scanned):
+            (lp,) = scanned  # (P, ...) super-layer slice, pre-materialized
+            for j in range(P):
+                sub = jax.tree.map(lambda a: a[j], lp)
+                x, _ = _apply_mamba_block(cfg, sub, x, cache=None)
+            x, _ = _apply_dense_block(
+                cfg, shared, x, window=cfg.sliding_window or 0,
+                positions=positions, segment_ids=segment_ids, cache=None,
+                cache_index=cache_index, block_kv=block_kv,
+            )
+            return x, None
+
+        x, _ = _prefetch_scan(pbody, x, params["mamba"], (),
+                              prefetch=prefetch, remat=remat)
+        # the tail (a short python loop, not a scan) keeps the plain
+        # per-layer gather — nothing downstream to overlap it with
+        if "mamba_tail" in params:
+            tail_n = jax.tree.leaves(params["mamba_tail"])[0].shape[0]
+            for j in range(tail_n):
+                sub = jax.tree.map(lambda a: a[j], params["mamba_tail"])
+                x, _ = _apply_mamba_block(cfg, pxform(sub), x, cache=None)
+        return x, jnp.float32(0.0), {"mamba": None, "attn": None,
+                                     "tail": None}
 
     def body(x, scanned):
         if no_cache:
@@ -333,14 +422,14 @@ def _forward_hybrid(cfg, params, batch, caches, cache_index, remat, block_kv, px
     return x, jnp.float32(0.0), new_caches
 
 
-def _encode(cfg, params, encoder_embeds, enc_positions=None, remat=False, block_kv=512, pxform=None):
+def _encode(cfg, params, encoder_embeds, enc_positions=None, remat=False,
+            block_kv=512, pxform=None, prefetch=None):
     x = encoder_embeds
     B, S, _ = x.shape
     if enc_positions is None:
         enc_positions = jnp.arange(S)[None, :].repeat(B, 0)
 
-    def body(x, lp):
-        lp = (pxform or (lambda t: t))(lp)
+    def block(lp, x):
         h = L.rms_norm(x, lp["attn_norm"], cfg.norm_eps)
         # encoder self-attention is bidirectional
         a, _ = L.attn_apply(
@@ -349,7 +438,19 @@ def _encode(cfg, params, encoder_embeds, enc_positions=None, remat=False, block_
         x = x + a
         h = L.rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
         x = x + L.mlp_apply(cfg, lp["mlp"], h)
-        return x, None
+        return x
+
+    if prefetch is not None:
+        def pbody(x, scanned):
+            (lp,) = scanned
+            return block(lp, x), None
+
+        x, _ = _prefetch_scan(pbody, x, params["enc_layers"], (),
+                              prefetch=prefetch, remat=remat)
+        return L.rms_norm(x, params["enc_final_norm"], cfg.norm_eps)
+
+    def body(x, lp):
+        return block((pxform or (lambda t: t))(lp), x), None
 
     if remat:
         body = jax.checkpoint(body)
@@ -357,12 +458,13 @@ def _encode(cfg, params, encoder_embeds, enc_positions=None, remat=False, block_
     return L.rms_norm(x, params["enc_final_norm"], cfg.norm_eps)
 
 
-def _forward_audio(cfg, params, batch, caches, cache_index, remat, block_kv, pxform):
+def _forward_audio(cfg, params, batch, caches, cache_index, remat, block_kv,
+                   pxform, prefetch=None):
     # encoder runs on the stub-frontend frame embeddings
     enc_out = None
     if "encoder_embeds" in batch:
         enc_out = _encode(cfg, params, batch["encoder_embeds"], remat=remat,
-                          block_kv=block_kv, pxform=pxform)
+                          block_kv=block_kv, pxform=pxform, prefetch=prefetch)
     elif caches is not None and "enc_out" in caches:
         enc_out = caches["enc_out"]
     x = jnp.take(params["embed"], batch["tokens"], axis=0)
@@ -374,12 +476,7 @@ def _forward_audio(cfg, params, batch, caches, cache_index, remat, block_kv, pxf
 
     self_caches = caches["self"] if caches is not None and "self" in caches else None
 
-    def body(x, scanned):
-        if self_caches is None:
-            lp, cache = scanned, None
-        else:
-            lp, cache = scanned
-        lp = pxform(lp)
+    def dec_block(lp, x, cache):
         x, cache = _apply_dense_block(
             cfg, lp, x, window=0, positions=positions, segment_ids=segment_ids,
             cache=cache, cache_index=cache_index, block_kv=block_kv,
@@ -392,8 +489,23 @@ def _forward_audio(cfg, params, batch, caches, cache_index, remat, block_kv, pxf
         c, _ = L.attn_apply(
             cfg, lp["cross"], h, positions=positions, cross_kv=(k, v), block_kv=block_kv,
         )
-        x = x + c
-        return x, cache
+        return x + c, cache
+
+    if prefetch is not None:
+        def pbody(x, scanned):
+            (lp,) = scanned
+            return dec_block(lp, x, None)
+
+        x, _ = _prefetch_scan(pbody, x, params["dec_layers"], (),
+                              prefetch=prefetch, remat=remat)
+        return x, jnp.float32(0.0), {"self": None, "enc_out": enc_out}
+
+    def body(x, scanned):
+        if self_caches is None:
+            lp, cache = scanned, None
+        else:
+            lp, cache = scanned
+        return dec_block(pxform(lp), x, cache)
 
     if remat:
         body = jax.checkpoint(body)
@@ -408,26 +520,35 @@ def _forward_audio(cfg, params, batch, caches, cache_index, remat, block_kv, pxf
 # ===========================================================================
 def apply(cfg: ModelConfig, params, batch, *, caches=None, cache_index=None,
           remat: bool = False, block_kv: int = 512, moe_groups: int = 0,
-          pxform=None, last_only: bool = False):
+          pxform=None, prefetch=None, last_only: bool = False):
     """Forward pass.  last_only=True projects only the final position to
-    logits (serve prefill/decode: avoids a (B, S, V) tensor)."""
+    logits (serve prefill/decode: avoids a (B, S, V) tensor).
+
+    prefetch: FSDP gather transform for whole scan slices — switches the
+    layer trunks to the double-buffered ``odc.prefetch_scan``
+    (schedule='overlap'); training only, ignored on cached (serve) paths.
+    """
     if pxform is None:
         pxform = lambda t: t
+        prefetch = None  # prefetch is an FSDP mode; needs pxform for the
+        #                  global (non-stacked) leaves
     else:
         # materialize the non-stacked ("global") leaves; stacked layer leaves
         # are materialized per layer inside the scan bodies (FSDP pattern)
         params = pxform(params)
+    if caches is not None:
+        prefetch = None
     fam = cfg.family
     if fam == "ssm":
-        x, aux, new_caches = _forward_ssm(cfg, params, batch, caches, remat, pxform)
+        x, aux, new_caches = _forward_ssm(cfg, params, batch, caches, remat, pxform, prefetch)
     elif fam == "hybrid":
-        x, aux, new_caches = _forward_hybrid(cfg, params, batch, caches, cache_index, remat, block_kv, pxform)
+        x, aux, new_caches = _forward_hybrid(cfg, params, batch, caches, cache_index, remat, block_kv, pxform, prefetch)
     elif fam == "audio":
-        x, aux, new_caches = _forward_audio(cfg, params, batch, caches, cache_index, remat, block_kv, pxform)
+        x, aux, new_caches = _forward_audio(cfg, params, batch, caches, cache_index, remat, block_kv, pxform, prefetch)
     elif cfg.num_experts:
-        x, aux, new_caches = _forward_moe(cfg, params, batch, caches, cache_index, remat, block_kv, moe_groups, pxform)
+        x, aux, new_caches = _forward_moe(cfg, params, batch, caches, cache_index, remat, block_kv, moe_groups, pxform, prefetch)
     else:
-        x, aux, new_caches = _forward_dense(cfg, params, batch, caches, cache_index, remat, block_kv, pxform)
+        x, aux, new_caches = _forward_dense(cfg, params, batch, caches, cache_index, remat, block_kv, pxform, prefetch)
     if last_only:
         x = x[:, -1:]
     return _logits(cfg, params, x), aux, new_caches
@@ -435,7 +556,7 @@ def apply(cfg: ModelConfig, params, batch, *, caches=None, cache_index=None,
 
 def loss(cfg: ModelConfig, params, batch, *, remat: bool = False,
          block_kv: int = 512, moe_groups: int = 0, pxform=None,
-         reduction: str = "mean"):
+         prefetch=None, reduction: str = "mean"):
     """Weighted token cross-entropy (weights = loss_mask; supports GRPO-style
     advantage weighting by passing signed weights).
 
@@ -443,7 +564,7 @@ def loss(cfg: ModelConfig, params, batch, *, remat: bool = False,
     engines to accumulate across microbatches before global normalization)."""
     logits, aux, _ = apply(
         cfg, params, batch, remat=remat, block_kv=block_kv, moe_groups=moe_groups,
-        pxform=pxform,
+        pxform=pxform, prefetch=prefetch,
     )
     targets = batch["targets"]
     mask = batch.get("loss_mask")

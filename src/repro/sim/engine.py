@@ -8,11 +8,21 @@ tables (3–6) and the parametric study (Fig. 10):
 
   Collective (FSDP):  T = Σ_m Σ_l max_d  t(m, d, l)        (paper Eq. 1)
   ODC:                T = max_d Σ_m Σ_l  t(m, d, l)  (+ final barrier)
+  Overlapped ODC:     T = max_d [fill + Σ_m Σ_l max(c(m,d,l), comm_l)]
 
 with per-(microbatch, device, layer) compute times from the cost model and
 per-layer communication charged from the Table 2 volume model.  Devices
 with fewer microbatches under LB-Mini simply finish their sums earlier —
 the ``max_d`` moves outside, which is the whole paper in one line.
+
+scheme='overlap' models ``schedule='overlap'`` (double-buffered prefetch):
+layer l+1's gather runs under layer l's compute, so per (microbatch,
+layer) the device pays max(compute, comm) instead of compute + comm, plus
+one pipeline-fill comm charge for the first prefetch.  ``cfg.overlap``
+(the exogenous hidden fraction applied to the wire time) still applies
+first; the scheme then hides the *remaining* exposed comm endogenously.
+Overlap can always fall back to in-line issue, so its makespan is clamped
+to never exceed the plain ODC schedule's.
 
 ``bubble_rate`` = idle time / (devices × makespan), the paper's metric.
 """
@@ -103,8 +113,10 @@ def simulate_minibatch(plan: Plan, seqlens: Sequence[int], *,
                        scheme: str, cfg: SimConfig = SimConfig(),
                        device_speed: Optional[Sequence[float]] = None
                        ) -> SimResult:
-    """scheme: 'collective' (per-layer barrier, Eq. 1) or 'odc'
-    (independent progress, barrier only at the minibatch end).
+    """scheme: 'collective' (per-layer barrier, Eq. 1), 'odc'
+    (independent progress, barrier only at the minibatch end), or
+    'overlap' (ODC + double-buffered prefetch: per-layer comm charged only
+    where it exceeds that layer's compute, plus one pipeline-fill charge).
 
     device_speed: optional per-device relative speed (1.0 = nominal,
     0.5 = a straggler at half speed) — the classic PS-vs-collective
@@ -116,12 +128,24 @@ def simulate_minibatch(plan: Plan, seqlens: Sequence[int], *,
         times = [[t / max(device_speed[d], 1e-9) for t in ts]
                  for d, ts in enumerate(times)]
     L = cfg.num_layers
-    odc = scheme == "odc"
+    odc = scheme in ("odc", "overlap")
     comm_l = cfg.comm.layer_comm_time(D, odc) * (1.0 - cfg.overlap)
 
     busy = [sum(ts) for ts in times]
 
-    if odc:
+    if scheme == "overlap":
+        finish = []
+        for b, ts in zip(busy, times):
+            # fill: the very first prefetch (layer 0, microbatch 0) has
+            # nothing to hide under; every later gather rides the max()
+            t = comm_l if ts else 0.0
+            for mb_t in ts:
+                t += L * max(mb_t / L, comm_l)
+            # the overlapped issue order can always degrade to in-line
+            # issue, so it is never slower than the plain ODC schedule
+            finish.append(min(t, b + L * comm_l * len(ts)))
+        makespan = max(finish) if finish else 0.0
+    elif odc:
         # each device runs straight through its own microbatches; the only
         # barrier is the minibatch end (optimizer step).
         finish = [b + L * comm_l * len(ts) for b, ts in zip(busy, times)]
@@ -169,6 +193,8 @@ def simulate_training(steps, *, scheme: str, cfg: SimConfig = SimConfig(),
 
     scheme='collective'         per-layer barriers inside every minibatch
     scheme='odc'                barrier at every minibatch end (the paper)
+    scheme='overlap'            ODC + double-buffered prefetch (comm only
+                                where it exceeds compute)
     scheme='odc', staleness=K   bounded-staleness PS (paper §6.2): a device
                                 may start minibatch t as soon as the
                                 *global* barrier for minibatch t-K has
@@ -198,8 +224,16 @@ def simulate_training(steps, *, scheme: str, cfg: SimConfig = SimConfig(),
             times = [[x / max(device_speed[d], 1e-9) for x in ts]
                      for d, ts in enumerate(times)]
         comm_l = cfg.comm.layer_comm_time(D, True) * (1.0 - cfg.overlap)
-        busy.append([sum(ts) + cfg.num_layers * comm_l * len(ts)
-                     for ts in times])
+        L = cfg.num_layers
+        if scheme == "overlap":
+            busy.append([
+                min((comm_l if ts else 0.0)
+                    + sum(L * max(t / L, comm_l) for t in ts),
+                    sum(ts) + L * comm_l * len(ts))
+                for ts in times])
+        else:
+            busy.append([sum(ts) + L * comm_l * len(ts)
+                         for ts in times])
 
     f = [0.0] * D
     barrier = [0.0] * (T + 1)

@@ -70,6 +70,51 @@ def test_odc_scatter_matches_psum_scatter(c, f, dtype):
         atol=2e-2 if dtype == jnp.bfloat16 else 1e-6)
 
 
+@pytest.mark.parametrize("L,c,f,dtype", [
+    (3, 2, 5, jnp.float32), (2, 4, 8, jnp.bfloat16), (5, 1, 16, jnp.float32),
+])
+def test_odc_gather_layers_matches_stacked_all_gather(L, c, f, dtype):
+    """Cross-layer double-buffered gather: L chained rings through one
+    two-slot staging pair must reproduce every layer's full tensor."""
+    mesh = _ring_mesh()
+    n = 4
+    x = jax.random.normal(KEY, (L, n * c, f)).astype(dtype)
+
+    def fn(xs):  # xs: (L, c, f) local
+        return ops.odc_gather_layers(xs, "x", interpret=True)
+
+    out = jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=P(None, "x"),
+                                out_specs=P(None), check_vma=False))(x)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(x, np.float32), rtol=0, atol=0)
+
+
+@pytest.mark.parametrize("L,c,f,dtype", [
+    (3, 2, 5, jnp.float32), (2, 4, 8, jnp.bfloat16),
+])
+def test_odc_scatter_layers_matches_per_layer_psum_scatter(L, c, f, dtype):
+    mesh = _ring_mesh()
+    n = 4
+    # per-device distinct contributions for every layer
+    y = jax.random.normal(KEY, (n, L, n * c, f)).astype(dtype)
+
+    def f_odc(yd):
+        return ops.odc_scatter_accumulate_layers(yd[0], "x", interpret=True)
+
+    def f_ref(yd):
+        return jax.lax.psum_scatter(yd[0], "x", scatter_dimension=1,
+                                    tiled=True)
+
+    run = lambda fn: jax.jit(jax.shard_map(
+        fn, mesh=mesh, in_specs=P("x"), out_specs=P(None, "x"),
+        check_vma=False))(y)
+    np.testing.assert_allclose(
+        np.asarray(run(f_odc), np.float32),
+        np.asarray(run(f_ref), np.float32),
+        rtol=2e-2 if dtype == jnp.bfloat16 else 1e-6,
+        atol=2e-2 if dtype == jnp.bfloat16 else 1e-6)
+
+
 @pytest.mark.parametrize("m,k,f", [(8, 16, 8), (4, 8, 16), (16, 32, 8)])
 def test_gather_matmul_overlap(m, k, f):
     mesh = _ring_mesh()

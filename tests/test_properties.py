@@ -5,6 +5,10 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need the 'test' extra: pip install -e .[test]")
 from hypothesis import given, settings, strategies as st
 
 from repro.balance import STRATEGIES, karmarkar_karp
