@@ -7,6 +7,7 @@
   hybrid_sharding  Appendix E           ZeRO++-style hybrid sharding
   convergence      Fig. 14              loss-curve equivalence
   straggler        (ours, §6.2)         heterogeneity + bounded staleness
+  straggler_sweep  (ours)               LB-Mini-Het vs collective under skew
   roofline         (ours)               dry-run roofline table
 
 ``python -m benchmarks.run [module ...]`` — no args runs everything.
@@ -29,6 +30,7 @@ ALL = [
     "hybrid_sharding",
     "convergence",
     "straggler",
+    "straggler_sweep",
     "roofline",
 ]
 

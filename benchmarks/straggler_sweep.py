@@ -1,0 +1,187 @@
+"""Heterogeneity sweep: makespan + bubble vs straggler severity × strategy.
+
+The tentpole claim of the heterogeneity extension: under device skew the
+collective schedule (Eq. 1: per-layer max over devices) degrades with the
+straggler at EVERY (microbatch, layer) barrier, while ODC pays it only
+where the straggler is the critical device — and once the balancer knows
+the speeds (LB-Mini-Het migrates whole microbatches off the straggler,
+legal only under ODC's unequal microbatch counts), ODC's makespan stays
+nearly flat while collective grows linearly in the slowdown factor.
+
+Grid: slowdown factor × {LB-Micro, LB-Mini, LB-Mini-Het} × {collective,
+ODC, overlap} (collective requires uniform microbatch counts → LB-Micro
+only).  skew=1.0 is the control: it must reproduce the corresponding
+``BENCH_overlap.json`` cells exactly (same seeds, same SimConfig, and a
+homogeneous profile is bit-exact no-op in the simulator).
+
+Writes ``benchmarks/BENCH_straggler.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.balance import STRATEGIES, make_straggler_profile
+from repro.data import sample_lengths
+from repro.sim import SimConfig, simulate_minibatch
+
+# shared with the overlap baseline so the skew=1.0 control stays
+# structurally (not coincidentally) comparable to BENCH_overlap.json
+from benchmarks.sft_throughput import MAX_TOKENS, SEEDS, WORLD
+
+MINIBS = 4
+FACTORS = (1.0, 1.5, 2.0, 3.0, 4.0)
+PROFILE_KIND = "one_slow"
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "BENCH_straggler.json")
+OVERLAP_JSON = os.path.join(os.path.dirname(__file__), "BENCH_overlap.json")
+
+# collective needs uniform microbatch counts → LB-Micro only; the two
+# minibatch-level balancers are ODC-only by construction
+GRID = (
+    ("lb_micro", "collective"),
+    ("lb_micro", "odc"),
+    ("lb_micro", "overlap"),
+    ("lb_mini", "odc"),
+    ("lb_mini", "overlap"),
+    ("lb_mini_het", "odc"),
+    ("lb_mini_het", "overlap"),
+)
+
+
+def run(datasets=("longalign", "swesmith"), factors=FACTORS,
+        kind=PROFILE_KIND, world=WORLD, max_tokens=MAX_TOKENS,
+        seeds=SEEDS):
+    cfg = SimConfig(overlap=0.0)  # fully-exposed comm, as in run_overlap
+    rows = []
+    for ds in datasets:
+        for f in factors:
+            profile = make_straggler_profile(kind, world, slow_factor=f)
+            for strat, scheme in GRID:
+                mks, sps, br = [], [], []
+                for s in range(seeds):
+                    lens = sample_lengths(ds, world * MINIBS, s).tolist()
+                    lens = [min(l, max_tokens) for l in lens]
+                    if strat == "lb_mini_het":
+                        plan = STRATEGIES[strat](lens, world, max_tokens,
+                                                 profile=profile)
+                    else:
+                        plan = STRATEGIES[strat](lens, world, max_tokens)
+                    r = simulate_minibatch(plan, lens, scheme=scheme,
+                                           cfg=cfg, profile=profile)
+                    mks.append(r.makespan)
+                    sps.append(len(lens) / r.makespan)
+                    br.append(r.bubble_rate)
+                rows.append({
+                    "dataset": ds, "slowdown": f, "strategy": strat,
+                    "scheme": scheme,
+                    "makespan_s": float(np.mean(mks)),
+                    "samples_per_s": float(np.mean(sps)),
+                    "bubble_pct": 100 * float(np.mean(br)),
+                })
+    # degradation relative to the same cell at skew 1.0
+    base = {(r["dataset"], r["strategy"], r["scheme"]): r["makespan_s"]
+            for r in rows if r["slowdown"] == 1.0}
+    for r in rows:
+        b = base[(r["dataset"], r["strategy"], r["scheme"])]
+        r["degradation_pct"] = 100 * (r["makespan_s"] / b - 1)
+    return rows
+
+
+def validate(rows, overlap_json=OVERLAP_JSON):
+    msgs = []
+    by = {(r["dataset"], r["slowdown"], r["strategy"], r["scheme"]): r
+          for r in rows}
+    datasets = sorted({r["dataset"] for r in rows})
+    factors = sorted({r["slowdown"] for r in rows})
+
+    # 1. the skew=1.0 control must reproduce BENCH_overlap.json (same
+    #    seeds, same SimConfig, homogeneous profile is a no-op)
+    if os.path.exists(overlap_json):
+        with open(overlap_json) as fjson:
+            ref_rows = json.load(fjson)["rows"]
+        ref = {(r["dataset"], r["strategy"], r["scheme"]):
+               r["samples_per_s"] for r in ref_rows if r["minibs"] == MINIBS}
+        for (ds, strat, scheme), want in ref.items():
+            got_row = by.get((ds, 1.0, strat, scheme))
+            if got_row is None:
+                continue
+            got = got_row["samples_per_s"]
+            if abs(got - want) > 1e-9 * max(abs(want), 1.0):
+                msgs.append(f"skew=1.0 {ds}/{strat}/{scheme}: "
+                            f"{got} != BENCH_overlap {want}")
+    else:
+        msgs.append("BENCH_overlap.json missing — skew=1.0 control unchecked")
+
+    for ds in datasets:
+        mk = lambda f, st, sc: by[(ds, f, st, sc)]["makespan_s"]
+        # 2. slowing a device never speeds anything up
+        for strat, scheme in GRID:
+            for lo, hi in zip(factors, factors[1:]):
+                if mk(hi, strat, scheme) < mk(lo, strat, scheme) - 1e-9:
+                    msgs.append(f"{ds}/{strat}/{scheme}: makespan not "
+                                f"monotone in slowdown at {hi}")
+        # 3. ODC and overlap degrade strictly slower than collective
+        #    (absolute makespan growth), decisively so once the balancer
+        #    is profile-aware; the gap must widen monotonically
+        c1 = mk(1.0, "lb_micro", "collective")
+        for scheme in ("odc", "overlap"):
+            for strat in ("lb_mini", "lb_mini_het"):
+                o1 = mk(1.0, strat, scheme)
+                prev_gap = c1 - o1
+                for f in factors[1:]:
+                    d_coll = mk(f, "lb_micro", "collective") - c1
+                    d_odc = mk(f, strat, scheme) - o1
+                    # speed-oblivious LB-Mini shares collective's asymptotic
+                    # slope (the straggler's busy time), so it only has to
+                    # not degrade FASTER; the profile-aware balancer must
+                    # degrade strictly slower
+                    if strat == "lb_mini_het" and d_odc >= d_coll - 1e-9:
+                        msgs.append(f"{ds}/{strat}/{scheme}: degradation "
+                                    f"{d_odc:.3f} not strictly below "
+                                    f"collective {d_coll:.3f} at x{f}")
+                    if strat == "lb_mini" and d_odc > d_coll + 1e-9:
+                        msgs.append(f"{ds}/{strat}/{scheme}: degrades "
+                                    f"faster than collective at x{f}")
+                    gap = mk(f, "lb_micro", "collective") - mk(f, strat, scheme)
+                    if strat == "lb_mini_het" and gap < prev_gap - 1e-9:
+                        msgs.append(f"{ds}/{strat}/{scheme}: collective-vs-"
+                                    f"ODC gap shrank at x{f}")
+                    prev_gap = gap
+        # 4. the profile-aware balancer dominates the oblivious one on
+        #    every skewed cell
+        for f in factors[1:]:
+            if mk(f, "lb_mini_het", "odc") > mk(f, "lb_mini", "odc") + 1e-9:
+                msgs.append(f"{ds}: LB-Mini-Het worse than LB-Mini at x{f}")
+    return msgs
+
+
+def emit_json(rows, path=BENCH_JSON):
+    payload = {
+        "benchmark": "straggler_sweep",
+        "config": {"world": WORLD, "minibs": MINIBS,
+                   "max_tokens": MAX_TOKENS, "seeds": SEEDS,
+                   "profile_kind": PROFILE_KIND, "factors": list(FACTORS),
+                   "sim_overlap_fraction": 0.0},
+        "rows": rows,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def main():
+    from benchmarks.common import emit
+    rows = run()
+    emit(rows)
+    path = emit_json(rows)
+    print(f"# wrote {path}")
+    msgs = validate(rows)
+    print("# validation:", "OK" if not msgs else "; ".join(msgs))
+    return 0 if not msgs else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,10 +1,16 @@
-from repro.balance.cost import CostModel, get_compute_costs  # noqa: F401
+from repro.balance.cost import (  # noqa: F401
+    CostModel,
+    DeviceProfile,
+    get_compute_costs,
+    make_straggler_profile,
+)
 from repro.balance.kk import karmarkar_karp  # noqa: F401
 from repro.balance.strategies import (  # noqa: F401
     STRATEGIES,
     Plan,
     lb_micro,
     lb_mini,
+    lb_mini_het,
     local_sort,
     microbatch_partition,
     minibatch_partition,

@@ -15,6 +15,13 @@ microbatch a list of sample indices.
                    each device independently packs its local samples under
                    its own memory budget.  Devices may end up with different
                    microbatch counts — only valid with ODC.
+  LB-Mini-Het    — LB-Mini extended with a per-device speed model
+                   (``DeviceProfile``): the KK partition is matched to
+                   devices so that *normalized* load (work ÷ device speed)
+                   is minimized, then a greedy rebalance pass migrates
+                   whole microbatches off stragglers while it lowers the
+                   peak normalized load.  Degenerates to LB-Mini (identical
+                   assignments) when every device has the same speed.
   verl_native    — verl's two-level scheme (global balance first, then
                    minibatch split): the weak RL baseline (Listing 2).
   verl_optimized — the paper's fixed ordering (split minibatches first,
@@ -27,16 +34,26 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.balance.cost import CostModel, DEFAULT_COST_MODEL, get_compute_costs
+from repro.balance.cost import (
+    CostModel,
+    DEFAULT_COST_MODEL,
+    DeviceProfile,
+    get_compute_costs,
+)
 from repro.balance.kk import karmarkar_karp
 
 
 @dataclasses.dataclass
 class Plan:
-    """device -> list of microbatches -> list of global sample indices."""
+    """device -> list of microbatches -> list of global sample indices.
+
+    ``profile`` records the device model the plan was balanced for (None =
+    homogeneous assumption); the simulator picks it up so a plan
+    round-trips with the heterogeneity it was built against."""
 
     assignments: List[List[List[int]]]
     strategy: str = ""
+    profile: Optional[DeviceProfile] = None
 
     @property
     def world_size(self) -> int:
@@ -53,6 +70,17 @@ class Plan:
     def device_costs(self, costs: Sequence[float]) -> List[float]:
         return [sum(costs[i] for mb in dev for i in mb)
                 for dev in self.assignments]
+
+    def normalized_loads(self, costs: Sequence[float],
+                         profile: Optional[DeviceProfile] = None
+                         ) -> List[float]:
+        """Per-device time (work ÷ device speed) under ``profile`` (falls
+        back to the plan's own profile, then to homogeneous speeds)."""
+        profile = profile or self.profile
+        raw = self.device_costs(costs)
+        if profile is None:
+            return raw
+        return [profile.normalized(c, d) for d, c in enumerate(raw)]
 
     def validate(self, num_samples: int):
         seen = sorted(i for dev in self.assignments for mb in dev for i in mb)
@@ -153,6 +181,20 @@ def lb_micro(seqlens: Sequence[int], world_size: int, max_tokens: int,
     return Plan(assignments, "LB-Micro")
 
 
+def _pack_device_parts(device_parts, costs, seqlens, max_tokens
+                       ) -> List[List[List[int]]]:
+    """Per-device local packing under the token budget (paper Listing 1)
+    — shared by LB-Mini and LB-Mini-Het so the uniform-speed case stays
+    byte-identical by construction."""
+    assignments = []
+    for part in device_parts:
+        local_costs = [costs[i] for i in part]
+        local_lens = [seqlens[i] for i in part]
+        local_mbs = microbatch_partition(local_costs, local_lens, max_tokens)
+        assignments.append([[part[i] for i in mb] for mb in local_mbs])
+    return assignments
+
+
 def lb_mini(seqlens: Sequence[int], world_size: int, max_tokens: int,
             cost_model: CostModel = DEFAULT_COST_MODEL) -> Plan:
     """Paper §4: balance total compute across devices at the minibatch
@@ -160,13 +202,93 @@ def lb_mini(seqlens: Sequence[int], world_size: int, max_tokens: int,
     memory budget.  Microbatch counts may differ per device → ODC only."""
     costs = get_compute_costs(seqlens, cost_model)
     device_parts = minibatch_partition(costs, world_size, equal_size=False)
-    assignments = []
-    for part in device_parts:
-        local_costs = [costs[i] for i in part]
-        local_lens = [seqlens[i] for i in part]
-        local_mbs = microbatch_partition(local_costs, local_lens, max_tokens)
-        assignments.append([[part[i] for i in mb] for mb in local_mbs])
-    return Plan(assignments, "LB-Mini")
+    return Plan(_pack_device_parts(device_parts, costs, seqlens, max_tokens),
+                "LB-Mini")
+
+
+def lb_mini_het(seqlens: Sequence[int], world_size: int, max_tokens: int,
+                cost_model: CostModel = DEFAULT_COST_MODEL,
+                profile: Optional[DeviceProfile] = None,
+                max_migrations: Optional[int] = None) -> Plan:
+    """Heterogeneity-aware LB-Mini: balance *normalized* load (work ÷
+    device speed) instead of raw compute.
+
+    1. Karmarkar–Karp the minibatch into W parts on raw costs (same call
+       as LB-Mini, so the uniform-speed case is assignment-identical);
+    2. match parts to devices largest-sum → fastest-device, which
+       minimizes the peak *normalized* load over all part→device
+       matchings (pairing sorted sums with sorted speeds: any inversion
+       can only raise the max ratio);
+    3. pack each device's samples locally under its token budget (paper
+       Listing 1, unchanged);
+    4. greedy rebalance: while it strictly lowers the peak normalized
+       load, migrate one whole microbatch off the most-loaded device onto
+       the least-loaded one (whole microbatches already satisfy the token
+       budget, so a migrated one rides along as an extra microbatch on
+       the receiver — legal under ODC, where microbatch counts may
+       differ per device).
+
+    With a uniform-speed (or absent) profile every step degenerates to
+    LB-Mini and the assignments are byte-identical to ``lb_mini``'s.
+    """
+    if profile is not None and profile.world_size != world_size:
+        raise ValueError(
+            f"profile has {profile.world_size} devices, world={world_size}")
+    if profile is None or profile.is_uniform_speed():
+        base = lb_mini(seqlens, world_size, max_tokens, cost_model)
+        return Plan(base.assignments, "LB-Mini-Het", profile=profile)
+
+    costs = get_compute_costs(seqlens, cost_model)
+    device_parts = minibatch_partition(costs, world_size, equal_size=False)
+
+    # largest-sum part → fastest device (minimizes max over d of
+    # part_sum / speed_d among all matchings)
+    part_sums = [sum(costs[i] for i in p) for p in device_parts]
+    by_sum = sorted(range(world_size), key=lambda j: (-part_sums[j], j))
+    by_speed = sorted(range(world_size),
+                      key=lambda d: (-profile.speeds[d], d))
+    matched: List[List[int]] = [[] for _ in range(world_size)]
+    for j, d in zip(by_sum, by_speed):
+        matched[d] = device_parts[j]
+
+    assignments = _pack_device_parts(matched, costs, seqlens, max_tokens)
+
+    # greedy straggler-relief pass: move whole microbatches downhill
+    def mb_cost(mb):
+        return sum(costs[i] for i in mb)
+
+    loads = Plan(assignments).normalized_loads(costs, profile)
+    # None = auto budget; 0 is honored (matching-only, no migration pass)
+    budget = (max_migrations if max_migrations is not None
+              else 4 * world_size * max(
+                  (len(d) for d in assignments), default=1))
+    for _ in range(budget):
+        src = max(range(world_size), key=lambda d: loads[d])
+        peak = loads[src]
+        best = None  # (new_peak, dst, mb_index)
+        for dst in range(world_size):
+            if dst == src:
+                continue
+            for m, mb in enumerate(assignments[src]):
+                c = mb_cost(mb)
+                new_src = loads[src] - c / profile.speeds[src]
+                new_dst = loads[dst] + c / profile.speeds[dst]
+                new_peak = max(new_src, new_dst)
+                if best is None or new_peak < best[0]:
+                    best = (new_peak, dst, m)
+        if best is None or best[0] >= peak - 1e-12:
+            break
+        _, dst, m = best
+        mb = assignments[src].pop(m)
+        assignments[dst].append(mb)
+        c = mb_cost(mb)
+        loads[src] -= c / profile.speeds[src]
+        loads[dst] += c / profile.speeds[dst]
+
+    # a fully-drained device keeps an empty microbatch *list* (no phantom
+    # empty microbatch — the simulator charges per-microbatch comm, and a
+    # drained straggler genuinely does nothing until the minibatch barrier)
+    return Plan(assignments, "LB-Mini-Het", profile=profile)
 
 
 def verl_native(seqlens: Sequence[int], world_size: int, max_tokens: int,
@@ -221,4 +343,5 @@ STRATEGIES = {
     "local_sort": local_sort,
     "lb_micro": lb_micro,
     "lb_mini": lb_mini,
+    "lb_mini_het": lb_mini_het,
 }

@@ -360,6 +360,10 @@ def cache_pspecs(cache, rules: ShardingRules, mesh: Mesh, *,
         if name == "enc_out":  # (B, S_enc, d)
             b = None if shard_seq else dp
             return P(b, None, div(x.shape[-1]))
+        if name == "router_counts":  # (stack..., B, k, E)
+            r = x.ndim - 3
+            b = None if shard_seq else dp
+            return P(*([None] * r), b, None, None)
         return P(*([None] * x.ndim))
 
     return jax.tree_util.tree_map_with_path(spec, cache)
@@ -384,6 +388,10 @@ class GSPMDConfig:
     block_kv: int = 512
     moe_groups: int = 0
     param_dtype: Any = jnp.float32
+    device_profile: Any = None  # balance.cost.DeviceProfile: with
+    #                             comm='odc', p2p chains walk the profile's
+    #                             ring order (stragglers adjacent); values
+    #                             and lowered comm volume are unchanged
 
 
 def train_param_pspecs(cfg, params, gcfg: GSPMDConfig, mesh: Mesh):
@@ -498,7 +506,9 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, gcfg: GSPMDConfig,
         if dd:
             dim, axes = dd[0]
             ax = axes if len(axes) > 1 else axes[0]
-            leaf = odc.make_param_gather(ax, gcfg.comm, dim=dim)(leaf)
+            leaf = odc.make_param_gather(
+                ax, gcfg.comm, dim=dim,
+                device_profile=gcfg.device_profile)(leaf)
         auto = _drop_axis(spec, manual)
         if _axes_in_spec(auto):
             # use the context (abstract) mesh: inside shard_map the data

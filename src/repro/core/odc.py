@@ -30,12 +30,13 @@ the numerical oracles.
 from __future__ import annotations
 
 import functools
-from typing import Sequence, Union
+from typing import Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro import compat
+from repro.balance.cost import DeviceProfile
 
 AxisNames = Union[str, Sequence[str]]
 
@@ -61,15 +62,25 @@ def axis_index(axis_name: AxisNames):
     return idx
 
 
-def _ring_perm(n: int):
-    return [(j, (j + 1) % n) for j in range(n)]
+def _ring_perm(n: int, order: Optional[Sequence[int]] = None):
+    """Ring permutation pairs; ``order`` walks the ring through the devices
+    in that sequence (default: natural order).  Any order is
+    semantics-preserving — ``ring_gather``/``ring_scatter_accumulate`` index
+    shards through the same order — but a ``DeviceProfile``-derived order
+    keeps a straggler's slow hops on one ring segment."""
+    if order is None:
+        return [(j, (j + 1) % n) for j in range(n)]
+    assert sorted(order) == list(range(n)), order
+    return [(order[j], order[(j + 1) % n]) for j in range(n)]
 
 
-def _ppermute_next(x, axis_name: AxisNames):
+def _ppermute_next(x, axis_name: AxisNames,
+                   order: Optional[Sequence[int]] = None):
     """Send to the next device on the linearized ring — a single p2p hop."""
     ax = _axis_tuple(axis_name)
     if len(ax) == 1:
-        return jax.lax.ppermute(x, ax[0], _ring_perm(compat.axis_size(ax[0])))
+        return jax.lax.ppermute(x, ax[0],
+                                _ring_perm(compat.axis_size(ax[0]), order))
     # multi-axis linearized ring: permute within the minor axis; the wrap
     # element moves one step along the major axis. Implemented as a minor-axis
     # ring followed by a conditional major-axis shift of the wrap position.
@@ -79,30 +90,69 @@ def _ppermute_next(x, axis_name: AxisNames):
     n = 1
     for s in sizes:
         n *= s
-    return jax.lax.ppermute(x, ax, _ring_perm(n))
+    return jax.lax.ppermute(x, ax, _ring_perm(n, order))
+
+
+def _ring_order(axis_name: AxisNames,
+                device_profile: Optional[DeviceProfile]):
+    """Resolve the profile to a concrete ring order for this axis, or None
+    (natural ring) when no profile applies or its size doesn't match."""
+    if device_profile is None:
+        return None
+    n = axis_size(axis_name)
+    if device_profile.world_size != n:
+        return None
+    order = device_profile.ring_order()
+    if order == list(range(n)):
+        return None  # natural ring — keep the canonical perm
+    return order
+
+
+def _ring_pos(order: Optional[Sequence[int]], me, n: int):
+    """(my ring position, position→device lookup) for a possibly traced
+    device index ``me``."""
+    if order is None:
+        return me, None
+    inv = [0] * n
+    for pos, d in enumerate(order):
+        inv[d] = pos
+    pos = jnp.asarray(inv, jnp.int32)[me]
+    return pos, jnp.asarray(order, jnp.int32)
 
 
 # ===========================================================================
 # ODC p2p primitives (ring decomposition of the collectives)
 # ===========================================================================
-def ring_gather(x, axis_name: AxisNames):
+def ring_gather(x, axis_name: AxisNames,
+                device_profile: Optional[DeviceProfile] = None):
     """ODC *gather*: reconstruct the full tensor from per-device shards with
     a chain of point-to-point transfers (no fused collective).
 
     x: local shard, shape (c, ...). Returns (n*c, ...), identical on every
     device along ``axis_name``.
+
+    device_profile: optional heterogeneity model; the chain then walks the
+    profile's ring order (stragglers adjacent) instead of the natural
+    device order.  The reconstructed tensor is identical either way — only
+    which peer each hop talks to changes.
     """
     n = axis_size(axis_name)
     me = axis_index(axis_name)
     c = x.shape[0]
+    order = _ring_order(axis_name, device_profile)
+    pos, pos2dev = _ring_pos(order, me, n)
 
     buf = jnp.zeros((n * c,) + x.shape[1:], x.dtype)
     buf = jax.lax.dynamic_update_slice_in_dim(buf, x, me * c, 0)
 
     def body(i, carry):
         buf, cur = carry
-        cur = _ppermute_next(cur, axis_name)
-        src = (me - i - 1) % n  # the shard that just arrived
+        cur = _ppermute_next(cur, axis_name, order)
+        # the shard that just arrived: i+1 ring positions behind me
+        if order is None:
+            src = (me - i - 1) % n
+        else:
+            src = pos2dev[(pos - i - 1) % n]
         buf = jax.lax.dynamic_update_slice_in_dim(buf, cur, src * c, 0)
         return buf, cur
 
@@ -110,27 +160,38 @@ def ring_gather(x, axis_name: AxisNames):
     return buf
 
 
-def ring_scatter_accumulate(y, axis_name: AxisNames):
+def ring_scatter_accumulate(y, axis_name: AxisNames,
+                            device_profile: Optional[DeviceProfile] = None):
     """ODC *scatter-accumulate*: each device pushes its contribution for
     every shard to the shard owner, who accumulates (p2p reduce-scatter).
 
     y: full-size local contribution, shape (n*c, ...). Returns the owner's
-    accumulated shard, shape (c, ...).
+    accumulated shard, shape (c, ...).  ``device_profile``: see
+    ``ring_gather`` — owner semantics are unchanged, only the hop order.
     """
     n = axis_size(axis_name)
     me = axis_index(axis_name)
     c = y.shape[0] // n
+    order = _ring_order(axis_name, device_profile)
+    pos, pos2dev = _ring_pos(order, me, n)
 
     def blk(j):
         return jax.lax.dynamic_slice_in_dim(y, j * c, c, 0)
 
-    # ring reduce-scatter: start with the partial for chunk (me-1), push it
-    # around the ring; after n-1 hops device d holds the full sum of chunk d.
-    acc = blk((me - 1) % n)
+    def chunk_at(ring_offset):
+        """Chunk owned by the device ``ring_offset`` positions behind me."""
+        if order is None:
+            return (me - ring_offset) % n
+        return pos2dev[(pos - ring_offset) % n]
+
+    # ring reduce-scatter: start with the partial for my ring predecessor's
+    # chunk, push it around the ring; after n-1 hops every device holds the
+    # full sum of its own chunk.
+    acc = blk(chunk_at(1))
 
     def body(h, acc):
-        acc = _ppermute_next(acc, axis_name)
-        acc = acc + blk((me - 1 - h) % n)
+        acc = _ppermute_next(acc, axis_name, order)
+        acc = acc + blk(chunk_at(1 + h))
         return acc
 
     return jax.lax.fori_loop(1, n, body, acc)
@@ -151,15 +212,21 @@ def collective_scatter(y, axis_name: AxisNames):
 # differentiable gather: fwd = param gather, bwd = grad scatter-accumulate
 # ===========================================================================
 def make_param_gather(axis_name: AxisNames, comm: str = "collective",
-                      dim: int = 0):
+                      dim: int = 0,
+                      device_profile: Optional[DeviceProfile] = None):
     """Returns gather(x_shard) -> x_full along ``dim`` with a custom VJP
     whose backward pass is the matching gradient scatter-accumulate on the
     same backend (paper §3: differentiating a parameter *gather* emits the
-    gradient *scatter-accumulate*)."""
+    gradient *scatter-accumulate*).
+
+    device_profile: with comm='odc', the p2p chains walk the profile's
+    ring order (stragglers adjacent) — values are unchanged."""
     if comm == "collective":
         g_fn, s_fn = collective_gather, collective_scatter
     elif comm == "odc":
-        g_fn, s_fn = ring_gather, ring_scatter_accumulate
+        g_fn = functools.partial(ring_gather, device_profile=device_profile)
+        s_fn = functools.partial(ring_scatter_accumulate,
+                                 device_profile=device_profile)
     else:
         raise ValueError(f"unknown comm backend {comm!r}")
 
@@ -187,11 +254,12 @@ def make_param_gather(axis_name: AxisNames, comm: str = "collective",
     return gather
 
 
-def make_scatter_accumulate(axis_name: AxisNames, comm: str = "collective"):
-    return functools.partial(
-        collective_scatter if comm == "collective" else ring_scatter_accumulate,
-        axis_name=axis_name,
-    )
+def make_scatter_accumulate(axis_name: AxisNames, comm: str = "collective",
+                            device_profile: Optional[DeviceProfile] = None):
+    if comm == "collective":
+        return functools.partial(collective_scatter, axis_name=axis_name)
+    return functools.partial(ring_scatter_accumulate, axis_name=axis_name,
+                             device_profile=device_profile)
 
 
 # ===========================================================================

@@ -15,7 +15,7 @@ from typing import Iterator, Optional
 
 import numpy as np
 
-from repro.balance.cost import CostModel, DEFAULT_COST_MODEL
+from repro.balance.cost import CostModel, DEFAULT_COST_MODEL, DeviceProfile
 from repro.balance.strategies import STRATEGIES, Plan
 from repro.data.lengths import sample_lengths
 
@@ -24,7 +24,8 @@ class SyntheticSFTLoader:
     def __init__(self, dataset: str, *, vocab_size: int, world_size: int,
                  minibatch_per_device: int, max_tokens: int,
                  strategy: str = "lb_mini", max_len: int = 0,
-                 cost_model: CostModel = DEFAULT_COST_MODEL, seed: int = 0):
+                 cost_model: CostModel = DEFAULT_COST_MODEL, seed: int = 0,
+                 device_profile: Optional[DeviceProfile] = None):
         self.dataset = dataset
         self.vocab = vocab_size
         self.world = world_size
@@ -35,6 +36,7 @@ class SyntheticSFTLoader:
         self.max_len = max_len
         self.cost_model = cost_model
         self.seed = seed
+        self.device_profile = device_profile
 
     def steps(self, num_steps: int) -> Iterator[dict]:
         rng = np.random.RandomState(self.seed)
@@ -43,8 +45,11 @@ class SyntheticSFTLoader:
             lens = sample_lengths(self.dataset, n, seed=self.seed + step,
                                   max_len=self.max_len)
             lens = np.minimum(lens, self.max_tokens)
+            kw = ({"profile": self.device_profile}
+                  if self.strategy_name == "lb_mini_het" else {})
             plan: Plan = self.strategy(
-                lens.tolist(), self.world, self.max_tokens, self.cost_model)
+                lens.tolist(), self.world, self.max_tokens, self.cost_model,
+                **kw)
             # zipf-distributed tokens: a learnable unigram structure, so the
             # example drivers show real loss descent below ln(V)
             toks = [np.minimum(rng.zipf(1.3, size=int(s)),

@@ -61,13 +61,25 @@ def main(argv=None):
     ap.add_argument("--dataset", default="longalign",
                     choices=("longalign", "swesmith", "aime"))
     ap.add_argument("--strategy", default="lb_mini",
-                    choices=("local_sort", "lb_micro", "lb_mini"))
+                    choices=("local_sort", "lb_micro", "lb_mini",
+                             "lb_mini_het"))
     ap.add_argument("--schedule", default="minibatch",
                     choices=("layer", "minibatch", "overlap"),
                     help="'overlap' = ODC with double-buffered parameter "
                          "prefetch (gather layer l+1 under layer l's "
                          "compute; scatter l under l-1's backward)")
     ap.add_argument("--comm", default="odc", choices=("collective", "odc"))
+    ap.add_argument("--device-profile", default="none",
+                    choices=("none", "homogeneous", "one_slow", "bimodal",
+                             "uniform"),
+                    help="simulated heterogeneity: balances plans for the "
+                         "profile (strategy lb_mini_het) and routes the ODC "
+                         "p2p ring through the profile's device order")
+    ap.add_argument("--slow-factor", type=float, default=2.0,
+                    help="straggler severity: affected devices run at "
+                         "1/slow-factor nominal speed")
+    ap.add_argument("--profile-jitter", type=float, default=0.0,
+                    help="sigma of the per-step lognormal slowdown noise")
     ap.add_argument("--steps", type=int, default=20)
     ap.add_argument("--minibatch-per-device", type=int, default=4)
     ap.add_argument("--max-tokens", type=int, default=512,
@@ -92,9 +104,18 @@ def main(argv=None):
     print(f"[train] {cfg.name} ({cfg.family}) on mesh {dict(mesh.shape)} "
           f"strategy={args.strategy} schedule={args.schedule} comm={args.comm}")
 
+    profile = None
+    if args.device_profile != "none":
+        from repro.balance import make_straggler_profile
+        profile = make_straggler_profile(
+            args.device_profile, world, slow_factor=args.slow_factor,
+            seed=args.seed, jitter=args.profile_jitter)
+        print(f"[train] device profile {args.device_profile}: speeds="
+              f"{[round(s, 3) for s in profile.speeds]}")
+
     gcfg = GSPMDConfig(
         rules=ShardingRules(), schedule=args.schedule, comm=args.comm,
-        block_kv=min(512, args.max_tokens),
+        block_kv=min(512, args.max_tokens), device_profile=profile,
     )
     lr_schedule = None
     if args.cosine or args.warmup_steps:
@@ -115,7 +136,8 @@ def main(argv=None):
         args.dataset, vocab_size=cfg.vocab_size, world_size=world,
         minibatch_per_device=args.minibatch_per_device,
         max_tokens=args.max_tokens, strategy=args.strategy,
-        max_len=args.max_len, cost_model=cm, seed=args.seed)
+        max_len=args.max_len, cost_model=cm, seed=args.seed,
+        device_profile=profile)
 
     extras = None
     if cfg.family == "audio":

@@ -51,17 +51,25 @@ def moe_params(key, cfg, dtype, prefix_shape=()):
     return p
 
 
-def _dispatch_group(x, expert_idx, gate_w, num_experts, capacity):
+def _dispatch_group(x, expert_idx, gate_w, num_experts, capacity,
+                    prior_counts=None):
     """x: (N, d); expert_idx, gate_w: (N,). Returns (N, d) expert output terms.
 
     Tokens beyond an expert's capacity are dropped (standard token-choice
     semantics); the scatter target has one extra overflow slot per expert.
+
+    prior_counts: (E,) tokens already routed to each expert by *earlier*
+    forward calls over the same sequence (decode: the prefill's counts).
+    The drop decision uses the running position (prior + within-call
+    cumsum) so incremental decode reproduces the full forward's drops;
+    the buffer slot stays the within-call position.
     """
     N, d = x.shape
     onehot = jax.nn.one_hot(expert_idx, num_experts, dtype=jnp.int32)  # (N, E)
-    pos = jnp.take_along_axis(jnp.cumsum(onehot, axis=0) - 1, expert_idx[:, None], 1)[:, 0]
+    within = jnp.take_along_axis(jnp.cumsum(onehot, axis=0) - 1, expert_idx[:, None], 1)[:, 0]
+    pos = within if prior_counts is None else within + prior_counts[expert_idx]
     keep = pos < capacity
-    slot = jnp.where(keep, pos, capacity)  # overflow slot = capacity
+    slot = jnp.where(keep, within, capacity)  # overflow slot = capacity
     buf = jnp.zeros((num_experts, capacity + 1, d), x.dtype)
     buf = buf.at[expert_idx, slot].add(jnp.where(keep[:, None], x, 0.0))
     return buf, (slot, keep)
@@ -104,37 +112,73 @@ def _make_expert_ffn(cfg, p):
     return expert_ffn
 
 
-def moe_apply(cfg, p, x, *, capacity_factor: float = 0.0, groups: int = 0):
+def moe_apply(cfg, p, x, *, capacity_factor: float = 0.0, groups: int = 0,
+              router_counts=None, capacity_len: int = 0):
     """x: (B, S, d) -> (B, S, d), plus the router load-balance aux loss.
 
     groups: number of dispatch groups (0 = one group per batch row). Each
     group dispatches independently with capacity ceil(G_tokens/E * cf * k).
+
+    router_counts / capacity_len (incremental decode): ``router_counts``
+    is the (B, k, E) int32 running token-per-expert tally from earlier
+    calls over the same sequences, and ``capacity_len`` the fixed
+    reference length (the KV-cache budget) the capacity is computed from
+    — both together make capacity drops *causally consistent*, so
+    prefill + decode reproduces the full forward exactly (for the
+    default per-batch-row grouping; multi-row groups are rejected, see
+    below).  When provided, groups must be batch rows (so the tally
+    survives across calls of different lengths) and the return gains a
+    third element, the updated counts.
     """
     cf = capacity_factor or cfg.moe_capacity_factor
     ep_axis = get_ep_axis()
     if ep_axis is not None:
+        if router_counts is not None:
+            # EP dispatch has no decode tally; refusing beats silently
+            # returning a 2-tuple where the caller expects 3
+            raise ValueError("incremental decode (router_counts) is not "
+                             "supported on the expert-parallel path")
         return _moe_apply_ep(cfg, p, x, ep_axis, cf)
 
     B, S, d = x.shape
     E, k = cfg.num_experts, cfg.experts_per_token
-    G = groups or B
+    if router_counts is not None and groups not in (0, B):
+        # multi-row dispatch groups regroup tokens differently at each
+        # call length, so a per-row tally cannot reproduce their drops
+        raise ValueError(
+            f"incremental decode (router_counts) requires per-batch-row "
+            f"dispatch groups; got groups={groups} for batch {B}")
+    G = B if router_counts is not None else (groups or B)
     toks = x.reshape(G, (B * S) // G, d)
     Ng = toks.shape[1]
-    capacity = max(1, int(-(-Ng * cf * k // E)))
+    ref_len = capacity_len if router_counts is not None else Ng
+    capacity = max(1, int(-(-ref_len * cf * k // E)))
 
     top_w, top_i, aux = _router(cfg, p, toks)
     expert_ffn = _make_expert_ffn(cfg, p)
 
     out = jnp.zeros_like(toks)
+    new_counts = []
     for slot_k in range(k):
         e_idx = top_i[..., slot_k]  # (G, Ng)
         g_w = top_w[..., slot_k].astype(x.dtype)
-        buf, slot_keep = jax.vmap(
-            lambda t, e: _dispatch_group(t, e, None, E, capacity)
-        )(toks, e_idx)
+        if router_counts is None:
+            buf, slot_keep = jax.vmap(
+                lambda t, e: _dispatch_group(t, e, None, E, capacity)
+            )(toks, e_idx)
+        else:
+            prior = router_counts[:, slot_k, :]  # (B, E)
+            buf, slot_keep = jax.vmap(
+                lambda t, e, pc: _dispatch_group(t, e, None, E, capacity, pc)
+            )(toks, e_idx, prior)
+            routed = jax.nn.one_hot(e_idx, E, dtype=prior.dtype).sum(axis=1)
+            new_counts.append(prior + routed)
         buf_out = jax.vmap(expert_ffn)(buf)
         out = out + jax.vmap(_combine_group)(buf_out, e_idx, slot_keep, g_w)
-    return out.reshape(B, S, d), aux
+    out = out.reshape(B, S, d)
+    if router_counts is not None:
+        return out, aux, jnp.stack(new_counts, axis=1)  # (B, k, E)
+    return out, aux
 
 
 def _moe_apply_ep(cfg, p, x, axis_name, cf):

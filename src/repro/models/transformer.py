@@ -136,19 +136,37 @@ def _apply_dense_block(cfg, lp, x, *, window, positions, segment_ids, cache,
 
 def _apply_moe_block(cfg, lp, x, *, window, positions, segment_ids, cache,
                      cache_index, block_kv, moe_groups):
+    # the decode cache carries the router's per-expert usage tally next to
+    # the KV buffers: capacity drops depend on how many earlier tokens hit
+    # each expert, state an incremental decode can't otherwise see
+    router_counts = None
+    attn_cache = cache
+    if cache is not None and "router_counts" in cache:
+        router_counts = cache["router_counts"]
+        attn_cache = {k: v for k, v in cache.items() if k != "router_counts"}
     h = L.rms_norm(x, lp["attn_norm"], cfg.norm_eps)
-    a, cache = L.attn_apply(
+    a, attn_cache = L.attn_apply(
         cfg, lp["attn"], h, window=window, positions=positions,
-        segment_ids=segment_ids, cache=cache, cache_index=cache_index,
+        segment_ids=segment_ids, cache=attn_cache, cache_index=cache_index,
         block_kv=block_kv,
     )
     x = x + a
     h = L.rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
-    ffn, aux = moe_mod.moe_apply(cfg, lp["moe"], h, groups=moe_groups)
+    if router_counts is not None:
+        ffn, aux, router_counts = moe_mod.moe_apply(
+            cfg, lp["moe"], h, groups=moe_groups,
+            router_counts=router_counts,
+            capacity_len=attn_cache["k"].shape[1])
+    else:
+        ffn, aux = moe_mod.moe_apply(cfg, lp["moe"], h, groups=moe_groups)
     if "shared_mlp" in lp:
         ffn = ffn + L.mlp_apply(cfg, lp["shared_mlp"], h)
     x = x + ffn
-    return x, cache, aux
+    new_cache = attn_cache
+    if router_counts is not None:
+        new_cache = dict(attn_cache)
+        new_cache["router_counts"] = router_counts
+    return x, new_cache, aux
 
 
 def _apply_mamba_block(cfg, lp, x, *, cache):
@@ -624,7 +642,13 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.float32,
     if cfg.num_experts:
         P = cfg.moe_period
         n_super = cfg.num_layers // P
-        c = {"moe": attn_cache((n_super,))}
+        moe_c = attn_cache((n_super,))
+        # router usage tally: makes capacity-drop decisions causally
+        # consistent between prefill and decode (see moe.moe_apply)
+        moe_c["router_counts"] = jnp.zeros(
+            (n_super, batch, cfg.experts_per_token, cfg.num_experts),
+            jnp.int32)
+        c = {"moe": moe_c}
         if P > 1:
             c["dense"] = attn_cache((n_super, P - 1))
         return c

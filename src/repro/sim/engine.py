@@ -25,6 +25,15 @@ Overlap can always fall back to in-line issue, so its makespan is clamped
 to never exceed the plain ODC schedule's.
 
 ``bubble_rate`` = idle time / (devices × makespan), the paper's metric.
+
+Heterogeneity (orthogonal to ``scheme``): a ``DeviceProfile`` scales each
+device's compute time by 1/speed and its wire time by its comm multiplier,
+plus an optional seeded lognormal per-step jitter on both (thermal noise,
+transient congestion).  A homogeneous profile (all speeds 1, no jitter) is
+a bit-exact no-op, so the paper tables are unchanged; a skewed one lets
+Tables 3–6 be re-run under stragglers, where the collective-vs-ODC gap
+widens: collective pays the straggler at every (microbatch, layer) barrier
+(Eq. 1's inner max), ODC only where the straggler is the critical device.
 """
 from __future__ import annotations
 
@@ -33,7 +42,7 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.balance.cost import CostModel, DEFAULT_COST_MODEL
+from repro.balance.cost import CostModel, DEFAULT_COST_MODEL, DeviceProfile
 from repro.balance.strategies import Plan
 
 
@@ -109,10 +118,30 @@ def _microbatch_times(plan: Plan, seqlens: Sequence[int], cfg: SimConfig):
     return out
 
 
+def _profile_multipliers(profile: Optional[DeviceProfile], D: int,
+                         step: int):
+    """Per-device (compute, wire) time multipliers for one step, or
+    (None, None) when no profile applies.  A homogeneous profile yields
+    exact 1.0s, so applying it is bit-exact with not applying it."""
+    if profile is None:
+        return None, None
+    if profile.world_size != D:
+        raise ValueError(
+            f"profile has {profile.world_size} devices, plan has {D}")
+    comp = [1.0 / s for s in profile.speeds]
+    comm = list(profile.comm_scales)
+    if profile.jitter:
+        jc, jw = profile.step_multipliers(step)
+        comp = [c * float(j) for c, j in zip(comp, jc)]
+        comm = [c * float(j) for c, j in zip(comm, jw)]
+    return comp, comm
+
+
 def simulate_minibatch(plan: Plan, seqlens: Sequence[int], *,
                        scheme: str, cfg: SimConfig = SimConfig(),
-                       device_speed: Optional[Sequence[float]] = None
-                       ) -> SimResult:
+                       device_speed: Optional[Sequence[float]] = None,
+                       profile: Optional[DeviceProfile] = None,
+                       step: int = 0) -> SimResult:
     """scheme: 'collective' (per-layer barrier, Eq. 1), 'odc'
     (independent progress, barrier only at the minibatch end), or
     'overlap' (ODC + double-buffered prefetch: per-layer comm charged only
@@ -120,48 +149,71 @@ def simulate_minibatch(plan: Plan, seqlens: Sequence[int], *,
 
     device_speed: optional per-device relative speed (1.0 = nominal,
     0.5 = a straggler at half speed) — the classic PS-vs-collective
-    heterogeneity scenario (paper §1/§6.2)."""
+    heterogeneity scenario (paper §1/§6.2).
+
+    profile: full heterogeneity model (DeviceProfile) — per-device compute
+    speed AND wire multipliers AND seeded per-step jitter; defaults to the
+    profile the plan was balanced with (Plan.profile), so heterogeneous
+    plans round-trip.  ``step`` seeds the jitter draw for this minibatch.
+    """
     D = plan.world_size
     times = _microbatch_times(plan, seqlens, cfg)
     if device_speed is not None:
         assert len(device_speed) == D
         times = [[t / max(device_speed[d], 1e-9) for t in ts]
                  for d, ts in enumerate(times)]
+    if profile is None:
+        profile = plan.profile
+    if device_speed is not None and profile is not None:
+        raise ValueError(
+            "both device_speed and a DeviceProfile (explicit or carried by "
+            "the plan) are set — the slowdown would be applied twice; "
+            "fold the speeds into the profile instead")
+    comp_mult, comm_mult = _profile_multipliers(profile, D, step)
+    if comp_mult is not None:
+        times = [[t * comp_mult[d] for t in ts]
+                 for d, ts in enumerate(times)]
     L = cfg.num_layers
     odc = scheme in ("odc", "overlap")
     comm_l = cfg.comm.layer_comm_time(D, odc) * (1.0 - cfg.overlap)
+    # per-device wire time (heterogeneous NICs / congestion jitter)
+    cl = ([comm_l * m for m in comm_mult] if comm_mult is not None
+          else [comm_l] * D)
 
     busy = [sum(ts) for ts in times]
 
     if scheme == "overlap":
         finish = []
-        for b, ts in zip(busy, times):
+        for d, (b, ts) in enumerate(zip(busy, times)):
             # fill: the very first prefetch (layer 0, microbatch 0) has
             # nothing to hide under; every later gather rides the max()
-            t = comm_l if ts else 0.0
+            t = cl[d] if ts else 0.0
             for mb_t in ts:
-                t += L * max(mb_t / L, comm_l)
+                t += L * max(mb_t / L, cl[d])
             # the overlapped issue order can always degrade to in-line
             # issue, so it is never slower than the plain ODC schedule
-            finish.append(min(t, b + L * comm_l * len(ts)))
+            finish.append(min(t, b + L * cl[d] * len(ts)))
         makespan = max(finish) if finish else 0.0
     elif odc:
         # each device runs straight through its own microbatches; the only
         # barrier is the minibatch end (optimizer step).
-        finish = [b + L * comm_l * len(ts) for b, ts in zip(busy, times)]
+        finish = [b + L * cl[d] * len(ts)
+                  for d, (b, ts) in enumerate(zip(busy, times))]
         makespan = max(finish) if finish else 0.0
     else:
         # per-layer lockstep: every (microbatch, layer) step is gated by the
-        # slowest device.  Devices with fewer microbatches still wait (they
-        # participate in the collectives with empty work).
+        # slowest device (compute AND wire).  Devices with fewer
+        # microbatches still wait (they participate in the collectives
+        # with empty work).
         M = max((len(ts) for ts in times), default=0)
+        comm_gate = max(cl) if cl else 0.0
         makespan = 0.0
         for m in range(M):
             per_layer = [
                 (times[d][m] / L if m < len(times[d]) else 0.0)
                 for d in range(D)
             ]
-            makespan += L * (max(per_layer) + comm_l)
+            makespan += L * (max(per_layer) + comm_gate)
         finish = [makespan] * D
 
     denom = D * makespan if makespan > 0 else 1.0
@@ -188,7 +240,8 @@ def samples_per_second(plan: Plan, seqlens: Sequence[int], scheme: str,
 
 def simulate_training(steps, *, scheme: str, cfg: SimConfig = SimConfig(),
                       staleness: int = 0,
-                      device_speed: Optional[Sequence[float]] = None) -> float:
+                      device_speed: Optional[Sequence[float]] = None,
+                      profile: Optional[DeviceProfile] = None) -> float:
     """Multi-minibatch makespan.  ``steps``: list of (plan, seqlens).
 
     scheme='collective'         per-layer barriers inside every minibatch
@@ -200,40 +253,59 @@ def simulate_training(steps, *, scheme: str, cfg: SimConfig = SimConfig(),
                                 *global* barrier for minibatch t-K has
                                 cleared — classic SSP semantics on top of
                                 ODC's decoupled progress.
+    profile: heterogeneity model; each minibatch t draws its own seeded
+    jitter (``DeviceProfile.step_multipliers(t)``), so a run is
+    reproducible end to end.  When omitted, each step falls back to its
+    own plan's carried profile (consistently across both branches).
     Returns the total wall-clock (seconds) to finish all minibatches.
     """
     T = len(steps)
     if T == 0:
         return 0.0
     D = steps[0][0].world_size
+    if device_speed is not None and (
+            profile is not None
+            or any(plan.profile is not None for plan, _ in steps)):
+        raise ValueError(
+            "both device_speed and a DeviceProfile (explicit or carried by "
+            "the plans) are set — the slowdown would be applied twice; "
+            "fold the speeds into the profile instead")
 
     if scheme == "collective" or staleness <= 0:
         total = 0.0
-        for plan, lens in steps:
+        for t, (plan, lens) in enumerate(steps):
             total += simulate_minibatch(
                 plan, lens, scheme=scheme, cfg=cfg,
-                device_speed=device_speed).makespan
+                device_speed=device_speed, profile=profile,
+                step=t).makespan
         return total
 
     # bounded-staleness ODC: f[d] = device finish time of its current
     # minibatch; B[t] = time the minibatch-t barrier cleared.
     busy = []
-    for plan, lens in steps:
+    for t, (plan, lens) in enumerate(steps):
         times = _microbatch_times(plan, lens, cfg)
         if device_speed is not None:
             times = [[x / max(device_speed[d], 1e-9) for x in ts]
                      for d, ts in enumerate(times)]
+        step_profile = profile if profile is not None else plan.profile
+        comp_mult, comm_mult = _profile_multipliers(step_profile, D, t)
+        if comp_mult is not None:
+            times = [[x * comp_mult[d] for x in ts]
+                     for d, ts in enumerate(times)]
         comm_l = cfg.comm.layer_comm_time(D, True) * (1.0 - cfg.overlap)
+        cl = ([comm_l * m for m in comm_mult] if comm_mult is not None
+              else [comm_l] * D)
         L = cfg.num_layers
         if scheme == "overlap":
             busy.append([
-                min((comm_l if ts else 0.0)
-                    + sum(L * max(t / L, comm_l) for t in ts),
-                    sum(ts) + L * comm_l * len(ts))
-                for ts in times])
+                min((cl[d] if ts else 0.0)
+                    + sum(L * max(x / L, cl[d]) for x in ts),
+                    sum(ts) + L * cl[d] * len(ts))
+                for d, ts in enumerate(times)])
         else:
-            busy.append([sum(ts) + L * comm_l * len(ts)
-                         for ts in times])
+            busy.append([sum(ts) + L * cl[d] * len(ts)
+                         for d, ts in enumerate(times)])
 
     f = [0.0] * D
     barrier = [0.0] * (T + 1)

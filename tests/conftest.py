@@ -20,8 +20,34 @@ os.environ.setdefault("XLA_FLAGS",
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax  # noqa: E402
+import pytest  # noqa: E402
 
 if not hasattr(jax, "shard_map"):
     from repro import compat
 
     jax.shard_map = compat.shard_map
+
+
+# ---------------------------------------------------------------------------
+# fault injection: seeded straggler profiles
+# ---------------------------------------------------------------------------
+STRAGGLER_KINDS = ("uniform", "one_slow", "bimodal")
+
+
+@pytest.fixture(scope="session")
+def straggler_profiles():
+    """Factory for seeded fault-injection device profiles.
+
+    The canonical vocabulary ('uniform' | 'one_slow' | 'bimodal', plus
+    'homogeneous' as the control) lives in
+    ``repro.balance.cost.make_straggler_profile`` so
+    ``benchmarks/straggler_sweep.py`` injects the *same* faults the tests
+    assert against.  Session-scoped so hypothesis tests may use it.
+    """
+    from repro.balance import make_straggler_profile
+
+    def make(kind, world=8, *, slow_factor=2.0, seed=0, jitter=0.0):
+        return make_straggler_profile(kind, world, slow_factor=slow_factor,
+                                      seed=seed, jitter=jitter)
+
+    return make

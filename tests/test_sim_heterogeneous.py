@@ -1,0 +1,186 @@
+"""Heterogeneous-simulator tests: exact no-op at skew=1.0 (the paper's
+tables are untouched), seeded-jitter reproducibility, and the straggler
+monotonicity the heterogeneity extension claims (collective degrades at
+least as fast as ODC as one device slows; the Eq. 1 gap widens once the
+balancer knows the profile)."""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.balance import (
+    DeviceProfile,
+    STRATEGIES,
+    lb_micro,
+    lb_mini,
+    lb_mini_het,
+    make_straggler_profile,
+)
+from repro.data import sample_lengths
+from repro.sim import SimConfig, simulate_minibatch, simulate_training
+
+WORLD = 8
+MAX_TOKENS = 65_536
+SCHEMES = ("collective", "odc", "overlap")
+
+
+def _lens(ds="longalign", n=32, seed=0):
+    return [min(l, MAX_TOKENS) for l in sample_lengths(ds, n, seed).tolist()]
+
+
+# ===========================================================================
+# golden: homogeneous profiles are bit-exact no-ops
+# ===========================================================================
+@pytest.mark.parametrize("scheme", SCHEMES)
+@pytest.mark.parametrize("strategy", ["local_sort", "lb_micro", "lb_mini"])
+def test_homogeneous_profile_reproduces_existing_makespans(scheme, strategy):
+    """skew=1.0 must be a no-op: the existing Eq. 1 / ODC / overlap
+    makespans (paper Tables 3–6 inputs) are reproduced to the last bit."""
+    for cfg in (SimConfig(), SimConfig(overlap=0.0)):
+        for seed in range(5):
+            lens = _lens(seed=seed)
+            plan = STRATEGIES[strategy](lens, WORLD, MAX_TOKENS)
+            ref = simulate_minibatch(plan, lens, scheme=scheme, cfg=cfg)
+            for profile in (DeviceProfile.homogeneous(WORLD),
+                            make_straggler_profile("one_slow", WORLD,
+                                                   slow_factor=1.0),
+                            make_straggler_profile("uniform", WORLD,
+                                                   slow_factor=1.0)):
+                got = simulate_minibatch(plan, lens, scheme=scheme, cfg=cfg,
+                                         profile=profile)
+                assert got.makespan == ref.makespan, (scheme, strategy, seed)
+                assert got.device_finish == ref.device_finish
+                assert got.bubble_rate == ref.bubble_rate
+
+
+def test_homogeneous_het_plan_reproduces_lb_mini_makespans():
+    """LB-Mini-Het with a homogeneous profile simulates identically to
+    LB-Mini (byte-identical assignments ⇒ bit-identical timing)."""
+    for seed in range(5):
+        lens = _lens(seed=seed)
+        base = lb_mini(lens, WORLD, MAX_TOKENS)
+        het = lb_mini_het(lens, WORLD, MAX_TOKENS,
+                          profile=DeviceProfile.homogeneous(WORLD))
+        for scheme in SCHEMES:
+            a = simulate_minibatch(base, lens, scheme=scheme)
+            b = simulate_minibatch(het, lens, scheme=scheme)
+            assert a.makespan == b.makespan
+
+
+def test_homogeneous_training_is_noop_including_staleness():
+    prof = DeviceProfile.homogeneous(WORLD)
+    steps = []
+    for t in range(4):
+        lens = _lens(seed=t)
+        steps.append((lb_mini(lens, WORLD, MAX_TOKENS), lens))
+    for scheme in SCHEMES:
+        for K in (0, 2):
+            if scheme == "collective" and K:
+                continue
+            ref = simulate_training(steps, scheme=scheme, staleness=K)
+            got = simulate_training(steps, scheme=scheme, staleness=K,
+                                    profile=prof)
+            assert got == ref, (scheme, K)
+
+
+# ===========================================================================
+# heterogeneity semantics
+# ===========================================================================
+def test_compute_skew_scales_single_device_makespan():
+    """With one device and no comm, halving speed exactly doubles time."""
+    lens = [128, 256]
+    plan = lb_mini(lens, 1, MAX_TOKENS)
+    cfg = SimConfig()
+    base = simulate_minibatch(plan, lens, scheme="odc", cfg=cfg).makespan
+    slow = simulate_minibatch(
+        plan, lens, scheme="odc", cfg=cfg,
+        profile=DeviceProfile(speeds=(0.5,))).makespan
+    assert slow == pytest.approx(2 * base, rel=1e-12)
+
+
+def test_comm_scale_inflates_wire_time_only():
+    """A wire-only skew leaves device busy time alone but stretches the
+    exposed-comm makespan."""
+    lens = _lens()
+    plan = lb_mini(lens, WORLD, MAX_TOKENS)
+    cfg = SimConfig(overlap=0.0)
+    prof = DeviceProfile(speeds=(1.0,) * WORLD,
+                         comm_scale=(4.0,) + (1.0,) * (WORLD - 1))
+    base = simulate_minibatch(plan, lens, scheme="odc", cfg=cfg)
+    skew = simulate_minibatch(plan, lens, scheme="odc", cfg=cfg,
+                              profile=prof)
+    assert skew.device_busy == base.device_busy
+    assert skew.makespan >= base.makespan
+    # collective: every layer barrier is gated by the slowest wire
+    b2 = simulate_minibatch(plan, lens, scheme="collective", cfg=cfg)
+    s2 = simulate_minibatch(plan, lens, scheme="collective", cfg=cfg,
+                            profile=prof)
+    assert s2.makespan > b2.makespan
+
+
+def test_jitter_is_seeded_and_step_keyed():
+    lens = _lens()
+    plan = lb_mini(lens, WORLD, MAX_TOKENS)
+    prof = make_straggler_profile("bimodal", WORLD, slow_factor=2.0,
+                                  seed=3, jitter=0.1)
+    a = simulate_minibatch(plan, lens, scheme="odc", profile=prof, step=5)
+    b = simulate_minibatch(plan, lens, scheme="odc", profile=prof, step=5)
+    c = simulate_minibatch(plan, lens, scheme="odc", profile=prof, step=6)
+    assert a.makespan == b.makespan
+    assert a.makespan != c.makespan
+    other = dataclasses.replace(prof, seed=4)
+    d = simulate_minibatch(plan, lens, scheme="odc", profile=other, step=5)
+    assert a.makespan != d.makespan
+
+
+def test_profile_world_size_mismatch_raises():
+    lens = _lens()
+    plan = lb_mini(lens, WORLD, MAX_TOKENS)
+    with pytest.raises(ValueError):
+        simulate_minibatch(plan, lens, scheme="odc",
+                           profile=DeviceProfile.homogeneous(WORLD + 1))
+
+
+# ===========================================================================
+# monotonicity: collective degrades at least as fast as ODC
+# ===========================================================================
+def test_collective_degrades_at_least_as_fast_as_odc(straggler_profiles):
+    """As one device slows, the collective schedule's absolute makespan
+    growth dominates ODC's (it pays the straggler at every per-layer
+    barrier); with the profile-aware balancer the dominance is strict
+    and the Eq. 1 gap widens monotonically."""
+    cfg = SimConfig(overlap=0.0)
+    factors = (1.0, 1.5, 2.0, 3.0, 4.0)
+    for ds in ("longalign", "swesmith"):
+        lens = _lens(ds=ds)
+        coll_plan = lb_micro(lens, WORLD, MAX_TOKENS)
+        mini_plan = lb_mini(lens, WORLD, MAX_TOKENS)
+        tc, to, th, gaps = [], [], [], []
+        for f in factors:
+            prof = straggler_profiles("one_slow", slow_factor=f)
+            het_plan = lb_mini_het(lens, WORLD, MAX_TOKENS, profile=prof)
+            tc.append(simulate_minibatch(coll_plan, lens, scheme="collective",
+                                         cfg=cfg, profile=prof).makespan)
+            to.append(simulate_minibatch(mini_plan, lens, scheme="odc",
+                                         cfg=cfg, profile=prof).makespan)
+            th.append(simulate_minibatch(het_plan, lens, scheme="odc",
+                                         cfg=cfg).makespan)
+            gaps.append(tc[-1] - th[-1])
+        for i, f in enumerate(factors):
+            # Eq. 1 dominance survives skew
+            assert to[i] <= tc[i] + 1e-9, (ds, f)
+            assert th[i] <= to[i] + 1e-9, (ds, f)
+            # makespans are monotone in straggler severity
+            if i:
+                assert tc[i] >= tc[i - 1] - 1e-9
+                assert to[i] >= to[i - 1] - 1e-9
+                # collective degrades at least as fast as speed-oblivious
+                # ODC, strictly faster than profile-aware ODC
+                assert tc[i] - tc[0] >= to[i] - to[0] - 1e-9, (ds, f)
+                assert tc[i] - tc[0] > th[i] - th[0], (ds, f)
+                # ... so the collective-vs-ODC gap widens
+                assert gaps[i] > gaps[i - 1], (ds, f)
