@@ -1,7 +1,18 @@
 """Shared helpers for the benchmark suite."""
 from __future__ import annotations
 
+import json
 import sys
+
+
+def write_bench_json(path: str, benchmark: str, config: dict, rows):
+    """Machine-readable baseline for regression tracking (CI artifacts,
+    cross-PR diffs) — the shared payload schema of BENCH_*.json files."""
+    payload = {"benchmark": benchmark, "config": config, "rows": rows}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
 
 
 def emit(rows, header=None, file=sys.stdout):

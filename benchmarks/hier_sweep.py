@@ -1,0 +1,152 @@
+"""Hierarchical (node × device) ODC sweep: node count × straggler skew.
+
+The ``hier`` backend's claim: on a multi-node mesh it keeps the
+collective's cheap NVSwitch-class intra-node path (fused all-gather inside
+the node) while the cross-node traffic rides ONE aggregated node-level p2p
+stream per hop — full RDMA bandwidth, none of flat ODC's interleaved
+cross-node hop penalty (paper Fig. 11) — and it inherits ODC's
+minibatch-level barrier discipline, so a straggler is paid only where it
+is the critical device, not at every (microbatch, layer) barrier.
+
+Grid: node count (devices_per_node fixed at 8) × straggler slowdown ×
+{(LB-Micro, collective), (LB-Mini-Het, odc), (LB-Mini-Het, hier)}.
+
+Acceptance targets (checked by ``validate``):
+  * skew = 1.0: hier matches flat ODC within 5% (same balancer) — the
+    hierarchy changes the comm path, not the schedule semantics;
+  * skew >= 2.0 on multi-node meshes (incl. the 4-node × 8-device cell):
+    hier strictly beats flat collective;
+  * hier is never slower than flat ODC (its per-layer comm time is a
+    lower bound of ODC's on every mesh), and makespans are monotone in
+    the slowdown factor.
+
+Writes ``benchmarks/BENCH_hier.json``.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.balance import STRATEGIES, make_straggler_profile
+from repro.data import sample_lengths
+from repro.sim import CommModel, SimConfig, simulate_minibatch
+
+# shared constants with the other sweeps so cells stay comparable
+from benchmarks.sft_throughput import MAX_TOKENS, SEEDS
+
+MINIBS = 4
+DEVICES_PER_NODE = 8
+NODES = (1, 2, 4, 8)
+FACTORS = (1.0, 1.5, 2.0, 3.0, 4.0)
+PROFILE_KIND = "one_slow"
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "BENCH_hier.json")
+
+GRID = (
+    ("lb_micro", "collective"),   # flat baseline (uniform counts required)
+    ("lb_mini_het", "odc"),       # flat ODC + profile-aware balancer
+    ("lb_mini_het", "hier"),      # hierarchical ODC + the same balancer
+)
+
+
+def run(datasets=("longalign", "swesmith"), nodes=NODES, factors=FACTORS,
+        kind=PROFILE_KIND, max_tokens=MAX_TOKENS, seeds=SEEDS):
+    cfg = SimConfig(overlap=0.0,  # fully-exposed comm, as in the other sweeps
+                    comm=CommModel(devices_per_node=DEVICES_PER_NODE))
+    rows = []
+    for ds in datasets:
+        for n in nodes:
+            world = n * DEVICES_PER_NODE
+            for f in factors:
+                profile = make_straggler_profile(kind, world, slow_factor=f)
+                for strat, scheme in GRID:
+                    mks, sps, br = [], [], []
+                    for s in range(seeds):
+                        lens = sample_lengths(ds, world * MINIBS, s).tolist()
+                        lens = [min(l, max_tokens) for l in lens]
+                        if strat == "lb_mini_het":
+                            plan = STRATEGIES[strat](lens, world, max_tokens,
+                                                     profile=profile)
+                        else:
+                            plan = STRATEGIES[strat](lens, world, max_tokens)
+                        r = simulate_minibatch(plan, lens, scheme=scheme,
+                                               cfg=cfg, profile=profile)
+                        mks.append(r.makespan)
+                        sps.append(len(lens) / r.makespan)
+                        br.append(r.bubble_rate)
+                    rows.append({
+                        "dataset": ds, "nodes": n, "world": world,
+                        "slowdown": f, "strategy": strat, "scheme": scheme,
+                        "makespan_s": float(np.mean(mks)),
+                        "samples_per_s": float(np.mean(sps)),
+                        "bubble_pct": 100 * float(np.mean(br)),
+                    })
+    # speedup vs the flat collective baseline on the same cell
+    base = {(r["dataset"], r["nodes"], r["slowdown"]): r["makespan_s"]
+            for r in rows if r["scheme"] == "collective"}
+    for r in rows:
+        b = base[(r["dataset"], r["nodes"], r["slowdown"])]
+        r["speedup_vs_collective_pct"] = 100 * (b / r["makespan_s"] - 1)
+    return rows
+
+
+def validate(rows):
+    msgs = []
+    by = {(r["dataset"], r["nodes"], r["slowdown"], r["scheme"]): r
+          for r in rows}
+    datasets = sorted({r["dataset"] for r in rows})
+    node_counts = sorted({r["nodes"] for r in rows})
+    factors = sorted({r["slowdown"] for r in rows})
+
+    for ds in datasets:
+        for n in node_counts:
+            mk = lambda f, sc: by[(ds, n, f, sc)]["makespan_s"]
+            # 1. hier ~ flat ODC at skew 1.0 (within 5%, same balancer)
+            h1, o1 = mk(1.0, "hier"), mk(1.0, "odc")
+            if abs(h1 - o1) > 0.05 * o1:
+                msgs.append(f"{ds}/nodes={n}: hier {h1:.3f} vs odc {o1:.3f} "
+                            f"differ >5% at skew 1.0")
+            for f in factors:
+                # 2. hier never slower than flat ODC (comm lower bound)
+                if mk(f, "hier") > mk(f, "odc") * (1 + 1e-9):
+                    msgs.append(f"{ds}/nodes={n}: hier slower than odc "
+                                f"at x{f}")
+                # 3. hier beats the flat collective at skew >= 2
+                if f >= 2.0 and mk(f, "hier") >= mk(f, "collective"):
+                    msgs.append(f"{ds}/nodes={n}: hier {mk(f, 'hier'):.3f} "
+                                f"not below collective "
+                                f"{mk(f, 'collective'):.3f} at x{f}")
+            # 4. slowing a device never speeds anything up
+            for _, scheme in GRID:
+                for lo, hi in zip(factors, factors[1:]):
+                    if mk(hi, scheme) < mk(lo, scheme) - 1e-9:
+                        msgs.append(f"{ds}/nodes={n}/{scheme}: makespan not "
+                                    f"monotone in slowdown at x{hi}")
+    return msgs
+
+
+def emit_json(rows, path=BENCH_JSON):
+    from benchmarks.common import write_bench_json
+    return write_bench_json(
+        path, "hier_sweep",
+        {"devices_per_node": DEVICES_PER_NODE,
+         "nodes": list(NODES), "minibs": MINIBS,
+         "max_tokens": MAX_TOKENS, "seeds": SEEDS,
+         "profile_kind": PROFILE_KIND, "factors": list(FACTORS),
+         "sim_overlap_fraction": 0.0},
+        rows)
+
+
+def main():
+    from benchmarks.common import emit
+    rows = run()
+    emit(rows)
+    path = emit_json(rows)
+    print(f"# wrote {path}")
+    msgs = validate(rows)
+    print("# validation:", "OK" if not msgs else "; ".join(msgs))
+    return 0 if not msgs else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -8,6 +8,8 @@
   convergence      Fig. 14              loss-curve equivalence
   straggler        (ours, §6.2)         heterogeneity + bounded staleness
   straggler_sweep  (ours)               LB-Mini-Het vs collective under skew
+  hier_sweep       (ours)               hierarchical (node × device) ODC vs
+                                        flat collective/ODC, nodes × skew
   roofline         (ours)               dry-run roofline table
 
 ``python -m benchmarks.run [module ...]`` — no args runs everything.
@@ -31,6 +33,7 @@ ALL = [
     "convergence",
     "straggler",
     "straggler_sweep",
+    "hier_sweep",
     "roofline",
 ]
 

@@ -13,7 +13,6 @@ Validation targets (paper):
 """
 from __future__ import annotations
 
-import json
 import os
 
 import numpy as np
@@ -115,18 +114,12 @@ def validate_overlap(rows):
 
 
 def emit_overlap_json(rows, path=BENCH_JSON):
-    """Machine-readable baseline for regression tracking (CI artifacts,
-    cross-PR comparisons)."""
-    payload = {
-        "benchmark": "sft_throughput_overlap",
-        "config": {"world": WORLD, "max_tokens": MAX_TOKENS,
-                   "seeds": SEEDS, "sim_overlap_fraction": 0.0},
-        "rows": rows,
-    }
-    with open(path, "w") as f:
-        json.dump(payload, f, indent=2, sort_keys=True)
-        f.write("\n")
-    return path
+    from benchmarks.common import write_bench_json
+    return write_bench_json(
+        path, "sft_throughput_overlap",
+        {"world": WORLD, "max_tokens": MAX_TOKENS,
+         "seeds": SEEDS, "sim_overlap_fraction": 0.0},
+        rows)
 
 
 def validate(rows):

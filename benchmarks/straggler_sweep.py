@@ -158,18 +158,14 @@ def validate(rows, overlap_json=OVERLAP_JSON):
 
 
 def emit_json(rows, path=BENCH_JSON):
-    payload = {
-        "benchmark": "straggler_sweep",
-        "config": {"world": WORLD, "minibs": MINIBS,
-                   "max_tokens": MAX_TOKENS, "seeds": SEEDS,
-                   "profile_kind": PROFILE_KIND, "factors": list(FACTORS),
-                   "sim_overlap_fraction": 0.0},
-        "rows": rows,
-    }
-    with open(path, "w") as f:
-        json.dump(payload, f, indent=2, sort_keys=True)
-        f.write("\n")
-    return path
+    from benchmarks.common import write_bench_json
+    return write_bench_json(
+        path, "straggler_sweep",
+        {"world": WORLD, "minibs": MINIBS,
+         "max_tokens": MAX_TOKENS, "seeds": SEEDS,
+         "profile_kind": PROFILE_KIND, "factors": list(FACTORS),
+         "sim_overlap_fraction": 0.0},
+        rows)
 
 
 def main():

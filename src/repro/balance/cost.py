@@ -135,6 +135,27 @@ class DeviceProfile:
         return sorted(range(self.world_size),
                       key=lambda d: (-self.speeds[d], d))
 
+    def node_collapse(self, group_size: int) -> "DeviceProfile":
+        """Collapse a device-granular profile to node granularity for the
+        hierarchical (node × device) comm backend: devices are grouped in
+        mesh order into contiguous nodes of ``group_size``; a node computes
+        at its slowest member's speed (the intra-node collective barriers
+        on it) and pays its most congested member's wire multiplier.
+        Jitter/seed carry over so node-level draws stay reproducible."""
+        if group_size <= 0 or self.world_size % group_size:
+            raise ValueError(
+                f"cannot collapse {self.world_size} devices into nodes of "
+                f"{group_size}")
+        n = self.world_size // group_size
+        cs = self.comm_scales
+        return dataclasses.replace(
+            self,
+            speeds=tuple(min(self.speeds[i * group_size:(i + 1) * group_size])
+                         for i in range(n)),
+            comm_scale=tuple(max(cs[i * group_size:(i + 1) * group_size])
+                             for i in range(n)),
+        )
+
     # -- canonical constructors (the fault-injection vocabulary shared by
     # tests/conftest.py and benchmarks/straggler_sweep.py) ------------------
     @classmethod

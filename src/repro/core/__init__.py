@@ -1,4 +1,13 @@
 from repro.core import odc  # noqa: F401
+from repro.core.backend import (  # noqa: F401
+    CommBackend,
+    SCHEDULES,
+    backend_names,
+    build_schedule_grad,
+    get_backend,
+    register_backend,
+    resolve,
+)
 from repro.core.fsdp import (  # noqa: F401
     FSDPConfig,
     FSDPShard,

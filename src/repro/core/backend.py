@@ -1,0 +1,433 @@
+"""First-class communication-backend registry — the (comm, schedule, scheme)
+seam.
+
+Before this module the paper's knobs were raw strings re-branched in four
+places: ``core/odc.py`` (``if comm == "collective"``), ``core/fsdp.py`` /
+``core/gspmd.py`` (``if schedule == "minibatch"``), and ``sim/engine.py``
+(``scheme in ("odc", "overlap")``).  A :class:`CommBackend` now owns every
+side of one communication strategy:
+
+  * the executable primitives (inside ``shard_map``): ``gather`` /
+    ``scatter_accumulate`` and the differentiable ``param_gather`` wrapper
+    whose custom VJP turns a parameter gather into the matching gradient
+    scatter-accumulate;
+  * the hardware realization hooks (``kernel_gather`` /
+    ``kernel_scatter_accumulate`` — the one-sided remote-DMA Pallas kernels
+    in ``repro.kernels``), where one exists;
+  * its simulator cost hook (``layer_comm_time``) and barrier
+    ``discipline`` (how ``repro.sim`` schedules it: per-layer lockstep,
+    independent device progress, or pipelined prefetch).
+
+Registered backends (canonical name → semantics):
+
+  ``collective``   fused ``all_gather`` / ``psum_scatter`` (FSDP baseline;
+                   lockstep per-layer barriers in the simulator).
+  ``odc``          p2p ring gather / scatter-accumulate (paper §3);
+                   independent device progress, barrier at the minibatch end.
+  ``odc-overlap``  same primitives as ``odc`` but implies the double-buffered
+                   prefetch schedule (``schedule='overlap'``); pipelined in
+                   the simulator.  Alias: ``overlap`` (the legacy sim scheme
+                   name).
+  ``hier``         hierarchical (node × device) ODC: parameters sharded over
+                   a 2D FSDP mesh; gather = intra-node collective all-gather
+                   + inter-node profile-ordered p2p ring (scatter mirrors
+                   it).  Keeps the collective's NVSwitch-class intra-node
+                   path while the cross-node traffic rides node-level p2p
+                   streams — avoiding both the per-layer barrier and ODC's
+                   cross-node efficiency penalty (paper Fig. 11).
+
+Every legacy string flag keeps working: ``comm='collective'|'odc'`` and sim
+``scheme='collective'|'odc'|'overlap'`` all resolve through
+:func:`get_backend`, and the resolved backends run the exact ops the old
+string ladders selected — byte-identical numerics on the old paths.
+
+``build_schedule_grad`` is the second half of the seam: the gradient-loop
+builder for the three schedules (``layer`` / ``minibatch`` / ``overlap``),
+previously duplicated between ``core/train_step.py::FSDPTrainer._build``
+and ``core/gspmd.py::make_train_step``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.balance.cost import DeviceProfile
+from repro.core import odc
+
+AxisNames = Union[str, Sequence[str]]
+
+#: the engine schedule vocabulary (where gathers/scatters are *placed*);
+#: orthogonal to the backend (how each gather/scatter *moves bytes*).
+SCHEDULES = ("layer", "minibatch", "overlap")
+
+
+# ===========================================================================
+# backend base + registry
+# ===========================================================================
+class CommBackend:
+    """One communication strategy, end to end (executable + simulated)."""
+
+    #: canonical registry name
+    name: str = "?"
+    #: legacy spellings that resolve to this backend
+    aliases: tuple = ()
+    #: simulator barrier discipline when this backend is named as a scheme:
+    #: 'lockstep' (per-layer barrier over all devices, paper Eq. 1),
+    #: 'independent' (each device runs free until the minibatch end), or
+    #: 'pipelined' (independent + per-layer comm hidden under compute).
+    discipline: str = "independent"
+    #: engine schedule this backend forces (None = honor the caller's knob)
+    implied_schedule: Optional[str] = None
+
+    # -- executable primitives (inside shard_map) ---------------------------
+    def gather(self, x, axis_name: AxisNames, *,
+               device_profile: Optional[DeviceProfile] = None):
+        """Local shard (c, ...) -> full tensor (n*c, ...) along dim 0."""
+        raise NotImplementedError
+
+    def scatter_accumulate(self, y, axis_name: AxisNames, *,
+                           device_profile: Optional[DeviceProfile] = None):
+        """Full-size contribution (n*c, ...) -> owned accumulated shard
+        (c, ...) along dim 0."""
+        raise NotImplementedError
+
+    def param_gather(self, axis_name: AxisNames, *, dim: int = 0,
+                     device_profile: Optional[DeviceProfile] = None):
+        """gather(x_shard) -> x_full along ``dim`` with a custom VJP whose
+        backward pass is this backend's gradient scatter-accumulate
+        (paper §3: differentiating a parameter *gather* emits the gradient
+        *scatter-accumulate*)."""
+        g_fn = functools.partial(self.gather, axis_name=axis_name,
+                                 device_profile=device_profile)
+        s_fn = functools.partial(self.scatter_accumulate,
+                                 axis_name=axis_name,
+                                 device_profile=device_profile)
+
+        def _g(x):
+            if dim == 0:
+                return g_fn(x)
+            return jnp.moveaxis(g_fn(jnp.moveaxis(x, dim, 0)), 0, dim)
+
+        def _s(y):
+            if dim == 0:
+                return s_fn(y)
+            return jnp.moveaxis(s_fn(jnp.moveaxis(y, dim, 0)), 0, dim)
+
+        @jax.custom_vjp
+        def gather(x):
+            return _g(x)
+
+        def fwd(x):
+            return _g(x), None
+
+        def bwd(_, ct):
+            return (_s(ct),)
+
+        gather.defvjp(fwd, bwd)
+        return gather
+
+    # -- hardware realization (Pallas one-sided remote DMA) -----------------
+    #: whether repro.kernels carries a one-sided remote-DMA realization of
+    #: this backend's primitives (the jnp primitives are its oracle)
+    has_kernels: bool = False
+
+    def kernel_gather(self, x_shard, axis_name: str, **kw):
+        raise NotImplementedError(
+            f"backend {self.name!r} has no Pallas kernel realization")
+
+    def kernel_scatter_accumulate(self, y, axis_name: str, **kw):
+        raise NotImplementedError(
+            f"backend {self.name!r} has no Pallas kernel realization")
+
+    # -- simulator cost hook ------------------------------------------------
+    def layer_comm_time(self, comm_model, devices: int) -> float:
+        """Seconds of per-layer FSDP communication charged by ``repro.sim``
+        for this backend on a ``devices``-wide axis (``comm_model`` is a
+        ``sim.engine.CommModel``)."""
+        raise NotImplementedError
+
+    def __repr__(self):
+        return f"<CommBackend {self.name!r}>"
+
+
+_REGISTRY: dict = {}
+
+
+def register_backend(backend: CommBackend) -> CommBackend:
+    """Register a backend under its canonical name and aliases."""
+    for name in (backend.name,) + tuple(backend.aliases):
+        if name in _REGISTRY:
+            raise ValueError(f"comm backend name {name!r} already registered "
+                             f"(by {_REGISTRY[name].name!r})")
+        _REGISTRY[name] = backend
+    return backend
+
+
+def get_backend(name) -> CommBackend:
+    """Resolve a backend by canonical name or legacy alias.  Passing an
+    already-resolved :class:`CommBackend` returns it unchanged."""
+    if isinstance(name, CommBackend):
+        return name
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown comm backend {name!r}; registered: "
+            f"{sorted(set(b.name for b in _REGISTRY.values()))} "
+            f"(+ aliases {sorted(n for n, b in _REGISTRY.items() if n != b.name)})"
+        ) from None
+
+
+def backend_names(*, include_aliases: bool = False):
+    """Canonical backend names (optionally with legacy aliases), for CLI
+    ``choices=`` lists and error messages."""
+    names = sorted(set(b.name for b in _REGISTRY.values()))
+    if include_aliases:
+        names += sorted(n for n, b in _REGISTRY.items() if n != b.name)
+    return tuple(names)
+
+
+def resolve(comm, schedule: str):
+    """(backend, schedule) for an engine config: the backend may force its
+    implied schedule (``comm='odc-overlap'`` ⇒ ``schedule='overlap'``);
+    otherwise the caller's schedule knob is honored unchanged."""
+    backend = get_backend(comm)
+    schedule = backend.implied_schedule or schedule
+    if schedule not in SCHEDULES:
+        raise ValueError(f"unknown schedule {schedule!r}; one of {SCHEDULES}")
+    return backend, schedule
+
+
+# ===========================================================================
+# the registered backends
+# ===========================================================================
+class CollectiveBackend(CommBackend):
+    """Fused XLA collectives — the FSDP baseline (paper Fig. 1)."""
+
+    name = "collective"
+    discipline = "lockstep"
+
+    def gather(self, x, axis_name, *, device_profile=None):
+        return odc.collective_gather(x, axis_name)
+
+    def scatter_accumulate(self, y, axis_name, *, device_profile=None):
+        return odc.collective_scatter(y, axis_name)
+
+    def layer_comm_time(self, comm_model, devices):
+        return comm_model.layer_comm_time(devices, False)
+
+
+class ODCBackend(CommBackend):
+    """p2p ring gather / scatter-accumulate (paper §3, Fig. 5); the chains
+    walk a ``DeviceProfile``'s ring order when one applies."""
+
+    name = "odc"
+    has_kernels = True
+
+    def gather(self, x, axis_name, *, device_profile=None):
+        return odc.ring_gather(x, axis_name, device_profile=device_profile)
+
+    def scatter_accumulate(self, y, axis_name, *, device_profile=None):
+        return odc.ring_scatter_accumulate(y, axis_name,
+                                           device_profile=device_profile)
+
+    def kernel_gather(self, x_shard, axis_name, **kw):
+        from repro.kernels import ops
+        return ops.odc_gather(x_shard, axis_name, **kw)
+
+    def kernel_scatter_accumulate(self, y, axis_name, **kw):
+        from repro.kernels import ops
+        return ops.odc_scatter_accumulate(y, axis_name, **kw)
+
+    def layer_comm_time(self, comm_model, devices):
+        return comm_model.layer_comm_time(devices, True)
+
+
+class OverlapODCBackend(ODCBackend):
+    """ODC with the double-buffered prefetch issue order: same gathers and
+    scatter-accumulates as ``odc`` (bit-identical values), pipelined one
+    layer ahead.  ``schedule='overlap'`` is implied in the engines; in the
+    simulator comm is charged only where it exceeds compute."""
+
+    name = "odc-overlap"
+    aliases = ("overlap",)  # legacy sim scheme spelling
+    discipline = "pipelined"
+    implied_schedule = "overlap"
+
+
+class HierBackend(CommBackend):
+    """Hierarchical (node × device) ODC.
+
+    Parameters are sharded over a 2D FSDP mesh ``(node, device)`` —
+    node-major, so a ``PartitionSpec(('node', 'device'))`` dim lays chunks
+    out exactly as the two-stage gather reconstructs them:
+
+      gather   x_shard --all_gather('device')--> node chunk
+                       --ring_gather('node')---> full tensor
+      scatter  ct_full --ring_scatter_accumulate('node')--> node chunk
+                       --psum_scatter('device')----------> owned shard
+
+    The intra-node stage rides the fused collective on NVSwitch-class
+    links; only the inter-node stage is p2p, and it moves ONE aggregated
+    node-level stream per hop (full RDMA bandwidth — no ``odc``-style
+    cross-node efficiency penalty, paper Fig. 11) while keeping ODC's
+    minibatch-level barrier discipline.
+
+    A leaf sharded over a single (trailing) axis — the 1-D norms/biases
+    that ``leaf_pspec`` shards over the innermost data axis only — uses
+    that tier's native collective; hierarchy needs at least two axes.
+
+    ``device_profile`` granularity: a profile over the devices of the
+    *inter* ring is used directly; a device-granular profile over the full
+    ``node × device`` world is collapsed to node granularity
+    (``DeviceProfile.node_collapse`` — a node is gated by its slowest
+    member) before ordering the inter-node ring.
+    """
+
+    name = "hier"
+
+    @staticmethod
+    def split_axes(axis_name: AxisNames):
+        """(inter_axes, intra_axis): the trailing (minor) mesh axis is the
+        intra-node tier, everything before it the inter-node ring."""
+        ax = (axis_name,) if isinstance(axis_name, str) else tuple(axis_name)
+        if len(ax) < 2:
+            return None, ax[0]
+        inter = ax[:-1] if len(ax) > 2 else ax[0]
+        return inter, ax[-1]
+
+    def _node_profile(self, device_profile, inter: AxisNames,
+                      intra: str) -> Optional[DeviceProfile]:
+        if device_profile is None:
+            return None
+        nodes = odc.axis_size(inter)
+        if device_profile.world_size == nodes:
+            return device_profile
+        group = odc.axis_size(intra)
+        if device_profile.world_size == nodes * group:
+            return device_profile.node_collapse(group)
+        return None  # size mismatch — natural ring (same as flat ODC)
+
+    def gather(self, x, axis_name, *, device_profile=None):
+        inter, intra = self.split_axes(axis_name)
+        if inter is None:  # single-tier leaf: native collective
+            return odc.collective_gather(x, intra)
+        x = odc.collective_gather(x, intra)
+        prof = self._node_profile(device_profile, inter, intra)
+        return odc.ring_gather(x, inter, device_profile=prof)
+
+    def scatter_accumulate(self, y, axis_name, *, device_profile=None):
+        inter, intra = self.split_axes(axis_name)
+        if inter is None:
+            return odc.collective_scatter(y, intra)
+        prof = self._node_profile(device_profile, inter, intra)
+        y = odc.ring_scatter_accumulate(y, inter, device_profile=prof)
+        return odc.collective_scatter(y, intra)
+
+    def layer_comm_time(self, comm_model, devices):
+        cm, d = comm_model, devices
+        g = min(cm.devices_per_node, d)
+        if d <= g:  # single node: identical to the others' intra path
+            return cm.layer_comm_time(d, False)
+        n = d // g  # nodes on the inter ring
+        k = cm.layer_param_bytes
+        # intra all-gather reconstructs only this node's 1/n chunk; the
+        # inter ring then moves the other chunks at full RDMA bandwidth
+        # (one aggregated node-level stream per hop — no p2p efficiency
+        # penalty, unlike flat ODC's interleaved cross-node hops)
+        intra = (g - 1) / g * (k / n)
+        inter = (n - 1) / n * k
+        return cm.latency + intra / cm.intra_bw + inter / cm.inter_bw
+
+
+COLLECTIVE = register_backend(CollectiveBackend())
+ODC = register_backend(ODCBackend())
+ODC_OVERLAP = register_backend(OverlapODCBackend())
+HIER = register_backend(HierBackend())
+
+
+# ===========================================================================
+# shared schedule-driven gradient loop (flat + GSPMD engines)
+# ===========================================================================
+def build_schedule_grad(schedule: str, *, loss_sum: Callable,
+                        gather_all: Optional[Callable] = None,
+                        pxform: Optional[Callable] = None,
+                        prefetch: Optional[Callable] = None,
+                        checkpoint_minibatch: bool = False):
+    """The gradient loop for one device's microbatches under a schedule.
+
+    Shared by the flat (``core/train_step.py``) and GSPMD
+    (``core/gspmd.py``) engines — the loop structure is the paper's
+    contribution and must not fork between them.
+
+      loss_sum(params, mb, pxform, prefetch) -> (nll_sum, token_count)
+      gather_all(params_local) -> fully-materialized params
+                                  (schedule='minibatch' only)
+      pxform    per-layer materialization hook ('layer'/'overlap')
+      prefetch  one-slot-ahead materialization hook ('overlap' only)
+      checkpoint_minibatch  remat the minibatch scan body (GSPMD engine)
+
+    Returns grad_core(params_local, microbatches) -> (lsum, tok, grads),
+    to be wrapped in shard_map and normalized by the caller.
+    """
+    if schedule not in SCHEDULES:
+        raise ValueError(f"unknown schedule {schedule!r}; one of {SCHEDULES}")
+
+    if schedule == "minibatch":
+        if gather_all is None:
+            raise ValueError("schedule='minibatch' needs a gather_all hook")
+
+        def grad_core(params_local, microbatches):
+            # ODC placement: gather each parameter once per minibatch;
+            # gradients accumulate LOCALLY across microbatches (no
+            # collective in the loop) and AD emits exactly one
+            # scatter-accumulate per parameter at the minibatch end
+            # (paper Fig. 2).
+            def total_loss(pl):
+                full = gather_all(pl)
+
+                def body(carry, mb):
+                    lsum, tok = carry
+                    l, t = loss_sum(full, mb, None, None)
+                    return (lsum + l, tok + t), None
+
+                scan_body = jax.checkpoint(body) if checkpoint_minibatch \
+                    else body
+                (lsum, tok), _ = jax.lax.scan(
+                    scan_body, (jnp.float32(0.0), jnp.float32(0.0)),
+                    microbatches)
+                return lsum, tok
+
+            (lsum, tok), grads = jax.value_and_grad(
+                total_loss, has_aux=True)(params_local)
+            return lsum, tok, grads
+
+        return grad_core
+
+    # FSDP placement ('layer'): per-layer gather in fwd + per-layer
+    # scatter-accumulate in bwd, once per microbatch (paper Fig. 1).
+    # 'overlap' keeps that structure but software-pipelines it: the
+    # prefetch hook materializes layer l+1 inside iteration l (and AD then
+    # defers layer l+1's scatter into layer l's backward) — same ops,
+    # overlap-friendly issue order.
+    pf = prefetch if schedule == "overlap" else None
+
+    def grad_core(params_local, microbatches):
+        gfun = jax.value_and_grad(
+            lambda pl, mb: loss_sum(pl, mb, pxform, pf), has_aux=True)
+
+        def body(carry, mb):
+            lsum, tok, gacc = carry
+            (l, t), g = gfun(params_local, mb)
+            gacc = jax.tree.map(jnp.add, gacc, g)
+            return (lsum + l, tok + t, gacc), None
+
+        zeros = jax.tree.map(jnp.zeros_like, params_local)
+        (lsum, tok, grads), _ = jax.lax.scan(
+            body, (jnp.float32(0.0), jnp.float32(0.0), zeros), microbatches)
+        return lsum, tok, grads
+
+    return grad_core

@@ -10,8 +10,10 @@ every device is simultaneously
 
 Knobs (paper §3/§5 method matrix):
 
-  comm     = 'collective' | 'odc'
-             all_gather/psum_scatter vs p2p ring gather/scatter-accumulate.
+  comm     = a ``repro.core.backend`` registry name: 'collective'
+             (all_gather/psum_scatter), 'odc' (p2p ring
+             gather/scatter-accumulate), 'hier' (intra-node collective +
+             inter-node ring over a 2-axis FSDP mesh), or a legacy alias.
   schedule = 'layer'     — parameters gathered per layer inside the scan and
                            gradients scatter-accumulated per layer *per
                            microbatch* (FSDP baseline; 2·L·M sync points).
@@ -210,8 +212,13 @@ def gather_all(storage, axis_name, comm: str):
 class FSDPConfig:
     axis_name: Any = "data"
     pod_axis: Any = None  # extra pure-DP axis: grads psum'd over it
-    comm: str = "collective"  # 'collective' | 'odc'
-    schedule: str = "layer"  # 'layer' | 'minibatch'
+    comm: str = "collective"  # backend registry name ('collective' | 'odc'
+    #                           | 'hier' | ...); legacy aliases resolve
+    #                           through repro.core.backend.get_backend
+    schedule: str = "layer"  # 'layer' | 'minibatch' ('overlap' is accepted
+    #                          but the flat engine has no prefetch hook, so
+    #                          it places comm like 'layer'; the pipelined
+    #                          issue order lives in the GSPMD engine)
 
 
 def fsdp_loss_and_grad(loss_sum_fn: Callable, fcfg: FSDPConfig):
@@ -221,56 +228,27 @@ def fsdp_loss_and_grad(loss_sum_fn: Callable, fcfg: FSDPConfig):
     (nll_sum, token_count) for ONE microbatch, where the loss is an
     unnormalized sum so microbatch gradients compose by addition.
 
+    The schedule loop itself (gather placement per 'layer' vs 'minibatch')
+    is ``repro.core.backend.build_schedule_grad`` — the same seam the GSPMD
+    engine builds on — with this engine's FSDPShard gather hooks plugged in.
+
     microbatches: a pytree whose leaves are stacked (M, ...) local arrays.
     Returns (grads_storage, metrics) with grads as sharded FSDPShard leaves,
     already normalized by the global token count.
     """
+    from repro.core import backend as B
+
     ax = fcfg.axis_name
+    comm_backend, schedule = B.resolve(fcfg.comm, fcfg.schedule)
+    grad_core = B.build_schedule_grad(
+        schedule,
+        loss_sum=lambda stor, mb, pxform, _pf: loss_sum_fn(stor, mb, pxform),
+        gather_all=lambda stor: gather_all(stor, ax, comm_backend),
+        pxform=make_pxform(ax, comm_backend),
+    )
 
     def grad_fn(storage, microbatches):
-        if fcfg.schedule == "minibatch":
-            # ODC: gather everything once; AD defers all gradient comm to a
-            # single scatter-accumulate per parameter at the minibatch end.
-            def total_loss(stor):
-                full = gather_all(stor, ax, fcfg.comm)
-
-                def body(carry, mb):
-                    lsum, tok = carry
-                    l, t = loss_sum_fn(full, mb, None)
-                    return (lsum + l, tok + t), None
-
-                (lsum, tok), _ = jax.lax.scan(
-                    body, (jnp.float32(0.0), jnp.float32(0.0)), microbatches
-                )
-                return lsum, tok
-
-            (lsum, tok), grads = jax.value_and_grad(total_loss, has_aux=True)(storage)
-        else:
-            # FSDP baseline: per-layer gather in fwd, per-layer
-            # scatter-accumulate in bwd, once per microbatch.
-            pxform = make_pxform(ax, fcfg.comm)
-
-            def mb_loss(stor, mb):
-                l, t = loss_sum_fn(stor, mb, pxform)
-                return l, t
-
-            gfun = jax.value_and_grad(mb_loss, has_aux=True)
-
-            def body(carry, mb):
-                lsum, tok, gacc = carry
-                (l, t), g = gfun(storage, mb)
-                gacc = jax.tree.map(jnp.add, gacc, g)
-                return (lsum + l, tok + t, gacc), None
-
-            zeros = jax.tree.map(lambda s: jnp.zeros_like(s.data) if _is_shard(s) else jnp.zeros_like(s),
-                                 storage, is_leaf=_is_shard)
-            zeros = jax.tree.map(
-                lambda s, z: FSDPShard(z, s.shape) if _is_shard(s) else z,
-                storage, zeros, is_leaf=_is_shard,
-            )
-            (lsum, tok, grads), _ = jax.lax.scan(
-                body, (jnp.float32(0.0), jnp.float32(0.0), zeros), microbatches
-            )
+        lsum, tok, grads = grad_core(storage, microbatches)
 
         # global normalization: sum loss/token counts over the DP axes
         axes = [ax] if isinstance(ax, str) else list(ax)

@@ -44,6 +44,15 @@ where parameter-gather / gradient-scatter collectives are placed:
                         ``repro.sim`` (scheme='overlap') charges the
                         timing: comm only where it exceeds compute.
 
+  comm=<backend>        how each gather / scatter-accumulate moves bytes —
+                        a ``repro.core.backend`` registry name:
+                        'collective' (fused AG/RS), 'odc' (p2p ring),
+                        'odc-overlap' (odc + implied overlap schedule), or
+                        'hier' (params sharded over a (node, device) 2D
+                        mesh: intra-node collective all-gather + inter-node
+                        profile-ordered p2p ring — needs
+                        ``ShardingRules(data=('node', 'device'))``).
+
   hybrid_pod=True       ZeRO++-style hybrid sharding (paper §6.1/App. E) on
                         the multi-pod mesh: parameter gather/scatter stays
                         *intra-pod* (params never sharded over ``pod``), and
@@ -379,7 +388,13 @@ class GSPMDConfig:
     #                              (ODC) | 'overlap' (ODC + double-buffered
     #                              prefetch: gather l+1 under layer l's
     #                              compute, scatter l under l-1's backward)
-    comm: str = "collective"  # 'collective' (fused AG/RS) | 'odc' (p2p ring)
+    comm: str = "collective"  # repro.core.backend registry name:
+    #                           'collective' (fused AG/RS) | 'odc' (p2p
+    #                           ring) | 'odc-overlap' (odc + implied
+    #                           overlap schedule) | 'hier' (intra-node
+    #                           collective + inter-node ring; needs a
+    #                           2-axis data tuple) — legacy aliases resolve
+    #                           through the registry
     hybrid_pod: bool = False  # ZeRO++-style: params not sharded over pod
     moe_ep: str = "none"  # 'none' (FSDP gather, baseline) | 'data'
     #                       (weight-stationary EP: experts sharded over the
@@ -438,14 +453,20 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, gcfg: GSPMDConfig,
     The FSDP axis (``data``, plus ``pod`` when the mesh has one) is handled
     *manually* inside ``shard_map`` — parameter gathers and gradient
     scatter-accumulates are explicit, with the (comm, schedule) knobs of the
-    paper.  The ``model`` axis stays automatic (GSPMD tensor parallelism).
+    paper resolved through the ``repro.core.backend`` registry.  The
+    ``model`` axis stays automatic (GSPMD tensor parallelism).
     """
-    if gcfg.schedule not in ("layer", "minibatch", "overlap"):
-        raise ValueError(f"unknown schedule {gcfg.schedule!r}")
     rules = gcfg.rules
-    from repro.core import odc
+    from repro.core import backend as B
+
+    comm_backend, schedule = B.resolve(gcfg.comm, gcfg.schedule)
 
     da = rules.data if isinstance(rules.data, tuple) else (rules.data,)
+    if comm_backend.name == "hier" and len(da) < 2:
+        raise ValueError(
+            "comm='hier' shards parameters over a (node, device) 2D mesh — "
+            "set ShardingRules(data=('node', 'device')) (or any 2-axis "
+            f"tuple); got data={rules.data!r}")
     manual = tuple(da) + ((rules.pod,) if rules.pod else ())
     ep = _moe_expert_parallel(cfg.num_experts, mesh, rules.model)
 
@@ -506,8 +527,8 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, gcfg: GSPMDConfig,
         if dd:
             dim, axes = dd[0]
             ax = axes if len(axes) > 1 else axes[0]
-            leaf = odc.make_param_gather(
-                ax, gcfg.comm, dim=dim,
+            leaf = comm_backend.param_gather(
+                ax, dim=dim,
                 device_profile=gcfg.device_profile)(leaf)
         auto = _drop_axis(spec, manual)
         if _axes_in_spec(auto):
@@ -606,54 +627,26 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, gcfg: GSPMDConfig,
         )
         return val, metrics["tokens"]
 
+    # the schedule loop (gather placement) is the shared seam with the flat
+    # engine — repro.core.backend.build_schedule_grad — fed this engine's
+    # gather/prefetch hooks; the minibatch scan body is rematerialized here
+    # (full-model gradient residency is the ODC trade, not activations)
+    grad_core = B.build_schedule_grad(
+        schedule,
+        loss_sum=loss_sum,
+        gather_all=gather_full,
+        pxform=pxform,
+        prefetch=pxform_overlap,
+        checkpoint_minibatch=True,
+    )
+
     def grad_minibatch(params_local, batch_local):
         from repro.models import moe as moe_mod
         moe_mod.set_ep_axis(ep_da)  # trace-time: weight-stationary dispatch
         return _grad_minibatch(params_local, batch_local)
 
     def _grad_minibatch(params_local, batch_local):
-        if gcfg.schedule == "minibatch":
-            # ODC: gather each parameter once per minibatch; gradients
-            # accumulate LOCALLY across microbatches (no collective in the
-            # loop) and AD emits exactly one scatter-accumulate per
-            # parameter at the minibatch end (paper Fig. 2).
-            def total_loss(pl):
-                full = gather_full(pl)
-
-                def body(carry, mb):
-                    lsum, tok = carry
-                    l, t = loss_sum(full, mb, None)
-                    return (lsum + l, tok + t), None
-
-                (lsum, tok), _ = jax.lax.scan(
-                    jax.checkpoint(body),
-                    (jnp.float32(0.0), jnp.float32(0.0)), batch_local)
-                return lsum, tok
-
-            (lsum, tok), grads = jax.value_and_grad(
-                total_loss, has_aux=True)(params_local)
-        else:
-            # FSDP baseline ('layer'): per-layer gather in fwd + per-layer
-            # scatter-accumulate in bwd, once per microbatch (Fig. 1).
-            # 'overlap' keeps that structure but software-pipelines it:
-            # the prefetch hook materializes layer l+1 inside iteration l
-            # (and AD then defers layer l+1's scatter into layer l's
-            # backward) — same ops, overlap-friendly issue order.
-            prefetch = pxform_overlap if gcfg.schedule == "overlap" else None
-            gfun = jax.value_and_grad(
-                lambda pl, mb: loss_sum(pl, mb, pxform, prefetch),
-                has_aux=True)
-
-            def body(carry, mb):
-                lsum, tok, gacc = carry
-                (l, t), g = gfun(params_local, mb)
-                gacc = jax.tree.map(jnp.add, gacc, g)
-                return (lsum + l, tok + t, gacc), None
-
-            zeros = jax.tree.map(jnp.zeros_like, params_local)
-            (lsum, tok, grads), _ = jax.lax.scan(
-                body, (jnp.float32(0.0), jnp.float32(0.0), zeros),
-                batch_local)
+        lsum, tok, grads = grad_core(params_local, batch_local)
 
         lsum = jax.lax.psum(lsum, manual)
         tok = jax.lax.psum(tok, manual)

@@ -1,7 +1,9 @@
 """On-Demand Communication primitives (paper §3), pure-JAX level.
 
-Two interchangeable communication backends for FSDP parameter gather and
-gradient scatter-accumulate, usable inside ``shard_map``:
+The raw gather / scatter-accumulate primitives for FSDP, usable inside
+``shard_map``.  They are packaged into first-class backends by the
+``repro.core.backend`` registry ('collective' | 'odc' | 'odc-overlap' |
+'hier'); the two base flavors are:
 
 * ``comm='collective'`` — the FSDP baseline: one fused ``all_gather`` /
   ``psum_scatter`` per parameter (XLA lowers these to ring/hierarchical
@@ -211,7 +213,7 @@ def collective_scatter(y, axis_name: AxisNames):
 # ===========================================================================
 # differentiable gather: fwd = param gather, bwd = grad scatter-accumulate
 # ===========================================================================
-def make_param_gather(axis_name: AxisNames, comm: str = "collective",
+def make_param_gather(axis_name: AxisNames, comm="collective",
                       dim: int = 0,
                       device_profile: Optional[DeviceProfile] = None):
     """Returns gather(x_shard) -> x_full along ``dim`` with a custom VJP
@@ -219,46 +221,23 @@ def make_param_gather(axis_name: AxisNames, comm: str = "collective",
     same backend (paper §3: differentiating a parameter *gather* emits the
     gradient *scatter-accumulate*).
 
-    device_profile: with comm='odc', the p2p chains walk the profile's
+    ``comm`` is a backend name resolved through the
+    ``repro.core.backend`` registry ('collective' | 'odc' | 'odc-overlap'
+    | 'hier', plus legacy aliases) or an already-resolved ``CommBackend``.
+
+    device_profile: with a p2p backend, the chains walk the profile's
     ring order (stragglers adjacent) — values are unchanged."""
-    if comm == "collective":
-        g_fn, s_fn = collective_gather, collective_scatter
-    elif comm == "odc":
-        g_fn = functools.partial(ring_gather, device_profile=device_profile)
-        s_fn = functools.partial(ring_scatter_accumulate,
-                                 device_profile=device_profile)
-    else:
-        raise ValueError(f"unknown comm backend {comm!r}")
-
-    def _g(x):
-        if dim == 0:
-            return g_fn(x, axis_name)
-        return jnp.moveaxis(g_fn(jnp.moveaxis(x, dim, 0), axis_name), 0, dim)
-
-    def _s(y):
-        if dim == 0:
-            return s_fn(y, axis_name)
-        return jnp.moveaxis(s_fn(jnp.moveaxis(y, dim, 0), axis_name), 0, dim)
-
-    @jax.custom_vjp
-    def gather(x):
-        return _g(x)
-
-    def fwd(x):
-        return _g(x), None
-
-    def bwd(_, ct):
-        return (_s(ct),)
-
-    gather.defvjp(fwd, bwd)
-    return gather
+    from repro.core import backend as B  # odc is imported by backend
+    return B.get_backend(comm).param_gather(
+        axis_name, dim=dim, device_profile=device_profile)
 
 
-def make_scatter_accumulate(axis_name: AxisNames, comm: str = "collective",
+def make_scatter_accumulate(axis_name: AxisNames, comm="collective",
                             device_profile: Optional[DeviceProfile] = None):
-    if comm == "collective":
-        return functools.partial(collective_scatter, axis_name=axis_name)
-    return functools.partial(ring_scatter_accumulate, axis_name=axis_name,
+    """Registry-resolved gradient scatter-accumulate for ``axis_name``."""
+    from repro.core import backend as B
+    return functools.partial(B.get_backend(comm).scatter_accumulate,
+                             axis_name=axis_name,
                              device_profile=device_profile)
 
 

@@ -1,9 +1,17 @@
 """End-to-end FSDP train step: shard_map gradient pass + sharded AdamW.
 
 The gradient pass runs under ``shard_map`` over the FSDP axis with the
-chosen (comm, schedule); the optimizer update runs on the globally-sharded
-storage arrays under plain jit (elementwise, no communication — the "server"
-update of the decentralized PS).
+chosen (comm, schedule) — ``comm`` is a ``repro.core.backend`` registry
+name and the schedule loop is the shared ``build_schedule_grad`` seam; the
+optimizer update runs on the globally-sharded storage arrays under plain
+jit (elementwise, no communication — the "server" update of the
+decentralized PS).
+
+Vocabulary note: the executable engines take ``comm`` (how bytes move:
+'collective' | 'odc' | 'odc-overlap' | 'hier') and ``schedule`` (where
+gathers/scatters are placed: 'layer' | 'minibatch' | 'overlap'); the
+simulator's ``scheme=`` names the same backends (legacy 'overlap' aliases
+'odc-overlap').  All three knobs resolve through the same registry.
 """
 from __future__ import annotations
 
@@ -73,7 +81,6 @@ class FSDPTrainer:
         fcfg, mesh = self.fcfg, self.mesh
         grad_fn = F.fsdp_loss_and_grad(self.loss_sum_fn, fcfg)
         ax = fcfg.axis_name
-        storage_specs = None  # resolved at trace time below
 
         def whole_step(storage, opt_state, batch, lr_scale):
             sspecs = F.storage_pspecs(storage, ax)

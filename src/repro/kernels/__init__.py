@@ -14,5 +14,9 @@
   ssd_scan         Mamba2 SSD chunked scan
 
 Each kernel has a jit wrapper in ``repro.kernels.ops`` and a pure-jnp
-oracle in ``repro.kernels.ref``.
+oracle in ``repro.kernels.ref``.  Backends in the
+``repro.core.backend`` registry expose these as their hardware
+realization (``CommBackend.kernel_gather`` /
+``kernel_scatter_accumulate``, gated on ``has_kernels``); the jnp
+primitives in ``repro.core.odc`` remain the numerical oracles.
 """

@@ -158,7 +158,10 @@ def main(argv=None):
     ap.add_argument("--schedule", default="layer",
                     choices=("layer", "minibatch"))
     ap.add_argument("--comm", default="collective",
-                    choices=("collective", "odc"))
+                    choices=("collective", "odc"),
+                    help="comm-backend registry name (how gathers/scatters "
+                         "move bytes); the production dry-run meshes are "
+                         "single-tier, so 'hier' is not offered here")
     ap.add_argument("--moe-ep", default="none", choices=("none", "data"))
     ap.add_argument("--hybrid-pod", action="store_true")
     ap.add_argument("--microbatches", type=int, default=0)

@@ -33,3 +33,26 @@ def make_host_mesh(data: int = 0, model: int = 1, pod: int = 1):
     axes = ("pod", "data", "model") if pod > 1 else ("data", "model")
     devs = np.asarray(jax.devices()[: int(np.prod(shape))]).reshape(shape)
     return Mesh(devs, axes)
+
+
+def make_hier_mesh(nodes: int = 2, device: int = 0, model: int = 1):
+    """A (node, device, model) mesh over local devices — the two-tier FSDP
+    layout for the ``hier`` comm backend (``ShardingRules(data=('node',
+    'device'))``): parameters sharded node-major over node × device,
+    intra-node gathers collective, inter-node gathers a p2p ring.
+
+    device=0 consumes all remaining devices on the intra-node axis."""
+    n = jax.device_count()
+    if device == 0:
+        if nodes * model <= 0 or n % (nodes * model) or n < nodes * model:
+            raise ValueError(
+                f"nodes*model ({nodes}*{model}) must evenly divide the "
+                f"device count ({n}) — every node needs the same number of "
+                f"devices and at least one")
+        device = n // (nodes * model)
+    shape = (nodes, device, model)
+    if int(np.prod(shape)) > n:
+        raise ValueError(f"hier mesh {shape} needs {int(np.prod(shape))} "
+                         f"devices, only {n} available")
+    devs = np.asarray(jax.devices()[: int(np.prod(shape))]).reshape(shape)
+    return Mesh(devs, ("node", "device", "model"))

@@ -27,10 +27,11 @@ import numpy as np
 from repro.balance.cost import CostModel
 from repro.checkpoint import save_checkpoint
 from repro.configs import get_config, get_reduced
+from repro.core import backend as backends
 from repro.core.gspmd import GSPMDConfig, ShardingRules, make_train_step
 from repro.data.loader import SyntheticSFTLoader
 from repro.data.packing import pack_plan_to_batches
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_hier_mesh, make_host_mesh
 from repro.models import transformer as T
 from repro.optim import AdamWConfig, adamw_init
 
@@ -64,11 +65,26 @@ def main(argv=None):
                     choices=("local_sort", "lb_micro", "lb_mini",
                              "lb_mini_het"))
     ap.add_argument("--schedule", default="minibatch",
-                    choices=("layer", "minibatch", "overlap"),
-                    help="'overlap' = ODC with double-buffered parameter "
-                         "prefetch (gather layer l+1 under layer l's "
-                         "compute; scatter l under l-1's backward)")
-    ap.add_argument("--comm", default="odc", choices=("collective", "odc"))
+                    choices=backends.SCHEDULES,
+                    help="where gathers/scatters are PLACED: 'layer' (per "
+                         "layer per microbatch, FSDP baseline), 'minibatch' "
+                         "(once per minibatch, ODC), 'overlap' (ODC with "
+                         "double-buffered parameter prefetch: gather layer "
+                         "l+1 under layer l's compute; scatter l under "
+                         "l-1's backward)")
+    ap.add_argument("--comm", default="odc",
+                    choices=backends.backend_names(include_aliases=True),
+                    help="how each gather/scatter MOVES bytes — a comm-"
+                         "backend registry name: 'collective' (fused "
+                         "AG/RS), 'odc' (p2p ring), 'odc-overlap' (odc + "
+                         "implied overlap schedule), 'hier' (intra-node "
+                         "collective + inter-node ring over a node×device "
+                         "mesh, see --nodes); legacy aliases (e.g. the "
+                         "sim's 'overlap') resolve to the same backends")
+    ap.add_argument("--nodes", type=int, default=2,
+                    help="with --comm hier: node count of the (node, "
+                         "device, model) mesh (devices per node = "
+                         "device_count / nodes / model)")
     ap.add_argument("--device-profile", default="none",
                     choices=("none", "homogeneous", "one_slow", "bimodal",
                              "uniform"),
@@ -99,10 +115,19 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
-    mesh = make_host_mesh(data=args.data_axis, model=args.model_axis)
-    world = mesh.shape["data"]
+    comm = backends.get_backend(args.comm)  # resolve aliases up front
+    if comm.name == "hier":
+        # two-tier FSDP: params sharded node-major over (node, device)
+        mesh = make_hier_mesh(nodes=args.nodes, model=args.model_axis)
+        rules = ShardingRules(data=("node", "device"))
+        world = mesh.shape["node"] * mesh.shape["device"]
+    else:
+        mesh = make_host_mesh(data=args.data_axis, model=args.model_axis)
+        rules = ShardingRules()
+        world = mesh.shape["data"]
     print(f"[train] {cfg.name} ({cfg.family}) on mesh {dict(mesh.shape)} "
-          f"strategy={args.strategy} schedule={args.schedule} comm={args.comm}")
+          f"strategy={args.strategy} schedule={args.schedule} "
+          f"comm={comm.name}")
 
     profile = None
     if args.device_profile != "none":
@@ -114,7 +139,7 @@ def main(argv=None):
               f"{[round(s, 3) for s in profile.speeds]}")
 
     gcfg = GSPMDConfig(
-        rules=ShardingRules(), schedule=args.schedule, comm=args.comm,
+        rules=rules, schedule=args.schedule, comm=comm.name,
         block_kv=min(512, args.max_tokens), device_profile=profile,
     )
     lr_schedule = None
@@ -151,6 +176,7 @@ def main(argv=None):
 
     t_start = time.time()
     samples_done = 0
+    loss = None  # no steps run yet (--steps 0 exits with a clean summary)
     for i, step_data in enumerate(loader.steps(args.steps)):
         batch = build_minibatch(step_data["plan"], step_data["sample_tokens"],
                                 args.max_tokens, world, extras)
@@ -167,6 +193,10 @@ def main(argv=None):
             save_checkpoint(args.ckpt_dir, i + 1,
                             {"params": params, "opt": opt_state})
     dt = time.time() - t_start
+    if loss is None:
+        print("[train] done: no training steps run (--steps "
+              f"{args.steps}); setup OK")
+        return 0
     print(f"[train] done: {samples_done} samples in {dt:.1f}s "
           f"({samples_done / dt:.2f} samples/s) final loss={loss:.4f}")
     return 0

@@ -46,6 +46,18 @@ from repro.balance.cost import CostModel, DEFAULT_COST_MODEL, DeviceProfile
 from repro.balance.strategies import Plan
 
 
+def _scheme_backend(scheme: str):
+    """Resolve a sim scheme name through the comm-backend registry
+    ('collective' | 'odc' | 'odc-overlap' | 'hier', with 'overlap' as the
+    legacy alias of 'odc-overlap').  The backend carries both the per-layer
+    comm cost hook and the barrier ``discipline`` this engine schedules
+    ('lockstep' | 'independent' | 'pipelined').  Imported lazily so the
+    simulator stays importable without touching jax-side modules first."""
+    from repro.core.backend import get_backend
+
+    return get_backend(scheme)
+
+
 @dataclasses.dataclass(frozen=True)
 class CommModel:
     """Per-layer communication times (seconds per byte + base latency).
@@ -142,10 +154,14 @@ def simulate_minibatch(plan: Plan, seqlens: Sequence[int], *,
                        device_speed: Optional[Sequence[float]] = None,
                        profile: Optional[DeviceProfile] = None,
                        step: int = 0) -> SimResult:
-    """scheme: 'collective' (per-layer barrier, Eq. 1), 'odc'
-    (independent progress, barrier only at the minibatch end), or
-    'overlap' (ODC + double-buffered prefetch: per-layer comm charged only
-    where it exceeds that layer's compute, plus one pipeline-fill charge).
+    """scheme: a comm-backend registry name — 'collective' (per-layer
+    barrier, Eq. 1), 'odc' (independent progress, barrier only at the
+    minibatch end), 'odc-overlap' / legacy alias 'overlap' (ODC +
+    double-buffered prefetch: per-layer comm charged only where it exceeds
+    that layer's compute, plus one pipeline-fill charge), or 'hier'
+    (hierarchical node × device: intra-node collective + inter-node
+    node-level p2p ring at full RDMA bandwidth, ODC's barrier discipline;
+    nodes are ``cfg.comm.devices_per_node`` wide).
 
     device_speed: optional per-device relative speed (1.0 = nominal,
     0.5 = a straggler at half speed) — the classic PS-vs-collective
@@ -174,15 +190,15 @@ def simulate_minibatch(plan: Plan, seqlens: Sequence[int], *,
         times = [[t * comp_mult[d] for t in ts]
                  for d, ts in enumerate(times)]
     L = cfg.num_layers
-    odc = scheme in ("odc", "overlap")
-    comm_l = cfg.comm.layer_comm_time(D, odc) * (1.0 - cfg.overlap)
+    backend = _scheme_backend(scheme)
+    comm_l = backend.layer_comm_time(cfg.comm, D) * (1.0 - cfg.overlap)
     # per-device wire time (heterogeneous NICs / congestion jitter)
     cl = ([comm_l * m for m in comm_mult] if comm_mult is not None
           else [comm_l] * D)
 
     busy = [sum(ts) for ts in times]
 
-    if scheme == "overlap":
+    if backend.discipline == "pipelined":
         finish = []
         for d, (b, ts) in enumerate(zip(busy, times)):
             # fill: the very first prefetch (layer 0, microbatch 0) has
@@ -194,7 +210,7 @@ def simulate_minibatch(plan: Plan, seqlens: Sequence[int], *,
             # issue, so it is never slower than the plain ODC schedule
             finish.append(min(t, b + L * cl[d] * len(ts)))
         makespan = max(finish) if finish else 0.0
-    elif odc:
+    elif backend.discipline == "independent":
         # each device runs straight through its own microbatches; the only
         # barrier is the minibatch end (optimizer step).
         finish = [b + L * cl[d] * len(ts)
@@ -247,7 +263,11 @@ def simulate_training(steps, *, scheme: str, cfg: SimConfig = SimConfig(),
     scheme='collective'         per-layer barriers inside every minibatch
     scheme='odc'                barrier at every minibatch end (the paper)
     scheme='overlap'            ODC + double-buffered prefetch (comm only
-                                where it exceeds compute)
+                                where it exceeds compute; canonical
+                                registry name 'odc-overlap')
+    scheme='hier'               hierarchical (node × device) ODC: intra-node
+                                collective, inter-node p2p ring; same
+                                barrier discipline as 'odc'
     scheme='odc', staleness=K   bounded-staleness PS (paper §6.2): a device
                                 may start minibatch t as soon as the
                                 *global* barrier for minibatch t-K has
@@ -271,7 +291,8 @@ def simulate_training(steps, *, scheme: str, cfg: SimConfig = SimConfig(),
             "the plans) are set — the slowdown would be applied twice; "
             "fold the speeds into the profile instead")
 
-    if scheme == "collective" or staleness <= 0:
+    backend = _scheme_backend(scheme)
+    if backend.discipline == "lockstep" or staleness <= 0:
         total = 0.0
         for t, (plan, lens) in enumerate(steps):
             total += simulate_minibatch(
@@ -293,11 +314,11 @@ def simulate_training(steps, *, scheme: str, cfg: SimConfig = SimConfig(),
         if comp_mult is not None:
             times = [[x * comp_mult[d] for x in ts]
                      for d, ts in enumerate(times)]
-        comm_l = cfg.comm.layer_comm_time(D, True) * (1.0 - cfg.overlap)
+        comm_l = backend.layer_comm_time(cfg.comm, D) * (1.0 - cfg.overlap)
         cl = ([comm_l * m for m in comm_mult] if comm_mult is not None
               else [comm_l] * D)
         L = cfg.num_layers
-        if scheme == "overlap":
+        if backend.discipline == "pipelined":
             busy.append([
                 min((cl[d] if ts else 0.0)
                     + sum(L * max(x / L, cl[d]) for x in ts),
