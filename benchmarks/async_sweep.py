@@ -1,0 +1,166 @@
+"""Async rollout→train dispatch sweep: staleness × length variance × comm.
+
+The claim of the posttrain subsystem (``repro.posttrain``,
+``sim.simulate_posttrain``): when rollout lengths are highly variable,
+the synchronous alternating loop (generate the whole wave → train →
+push) idles the trainer through every wave's longest rollout, while
+bounded-staleness dispatch overlaps decode with training — and only the
+p2p (ODC) backends can cash that in, because a collective weight push is
+a barrier every trainer device joins (``push_blocks_trainer``) and the
+collective train step re-serializes on per-layer barriers anyway.
+
+Grid: rollout-length spread factor × staleness bound × {(LB-Micro,
+collective), (LB-Mini, odc)} — strategy per backend as in the other
+sweeps (uniform microbatch counts are a collective requirement).
+
+Acceptance targets (checked by ``validate``):
+  * staleness-0 async reproduces the synchronous loop EXACTLY (same
+    floats) on every cell — the pipeline's golden anchor;
+  * ODC with staleness >= 1 gains >= 15% throughput over the synchronous
+    loop at 4x length spread;
+  * the async gain of the collective pipeline stays strictly below ODC's
+    on every cell with staleness >= 1 (barrier-bound);
+  * makespan is monotone non-increasing in the staleness budget.
+
+Writes ``benchmarks/BENCH_async.json``.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.balance import make_plan
+from repro.data import sample_lengths, scale_spread
+from repro.sim import GenModel, SimConfig, simulate_posttrain
+
+WORLD = 8
+MINIBS = 4
+MAX_TOKENS = 16_384          # AIME rollout cap, as in rl_throughput
+WAVES = 8                    # train steps per pipeline run
+SEEDS = 8
+VARIANCES = (1.0, 2.0, 4.0)
+STALENESS = (0, 1, 2, 4)
+# decode seconds per generated token per stream: calibrated so one wave's
+# generation modestly exceeds its training step (RL post-training is
+# decode-bound in practice; ReaLHF and verl both report generation as the
+# dominant phase)
+TIME_PER_TOKEN = 20e-6
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "BENCH_async.json")
+
+GRID = (
+    ("lb_micro", "collective"),  # collective needs uniform microbatch counts
+    ("lb_mini", "odc"),
+)
+
+
+def _steps(dataset, variance, seed, strategy, max_tokens=MAX_TOKENS):
+    """One pipeline run's waves: (plan, rollout lengths) per train step."""
+    steps = []
+    for t in range(WAVES):
+        lens = sample_lengths(dataset, WORLD * MINIBS,
+                              seed=1000 * seed + t)
+        lens = [int(l) for l in np.minimum(scale_spread(lens, variance),
+                                           max_tokens)]
+        steps.append((make_plan(lens, WORLD, max_tokens, strategy=strategy),
+                      lens))
+    return steps
+
+
+def run(dataset="aime", variances=VARIANCES, staleness=STALENESS,
+        seeds=SEEDS, time_per_token=TIME_PER_TOKEN):
+    cfg = SimConfig(overlap=0.0)  # fully-exposed comm, as in the other sweeps
+    gen = GenModel(time_per_token=time_per_token)
+    rows = []
+    for v in variances:
+        for strat, comm in GRID:
+            cached = [_steps(dataset, v, s, strat) for s in range(seeds)]
+            sync_ms = []
+            for s in range(seeds):
+                r = simulate_posttrain(cached[s], scheme="sync", comm=comm,
+                                       cfg=cfg, gen=gen)
+                sync_ms.append(r.makespan)
+            for K in staleness:
+                ms, idle = [], []
+                for s in range(seeds):
+                    r = simulate_posttrain(cached[s], scheme="async",
+                                           staleness=K, comm=comm, cfg=cfg,
+                                           gen=gen)
+                    ms.append(r.makespan)
+                    idle.append(r.trainer_idle / r.makespan)
+                n = WAVES * WORLD * MINIBS
+                rows.append({
+                    "dataset": dataset, "variance": v, "staleness": K,
+                    "strategy": strat, "comm": comm,
+                    "makespan_s": float(np.mean(ms)),
+                    "samples_per_s": float(np.mean([n / m for m in ms])),
+                    "trainer_idle_pct": 100 * float(np.mean(idle)),
+                    "sync_makespan_s": float(np.mean(sync_ms)),
+                    "speedup_vs_sync_pct": 100 * float(
+                        np.mean([b / m - 1 for b, m in zip(sync_ms, ms)])),
+                    "sync_exact_match": bool(all(
+                        m == b for m, b in zip(ms, sync_ms))) if K == 0
+                    else False,
+                })
+    return rows
+
+
+def validate(rows):
+    msgs = []
+    by = {(r["variance"], r["staleness"], r["comm"]): r for r in rows}
+    variances = sorted({r["variance"] for r in rows})
+    klist = sorted({r["staleness"] for r in rows})
+    for v in variances:
+        # 1. staleness-0 async ≡ sync, same floats
+        for comm in ("collective", "odc"):
+            if 0 in klist and not by[(v, 0, comm)]["sync_exact_match"]:
+                msgs.append(f"var={v}/{comm}: staleness-0 async != sync")
+        # 4. monotone in the staleness budget
+        for comm in ("collective", "odc"):
+            for lo, hi in zip(klist, klist[1:]):
+                if (by[(v, hi, comm)]["makespan_s"]
+                        > by[(v, lo, comm)]["makespan_s"] + 1e-9):
+                    msgs.append(f"var={v}/{comm}: makespan not monotone "
+                                f"in staleness at K={hi}")
+        # 3. collective stays barrier-bound: its async gain < ODC's
+        for K in klist:
+            if K == 0:
+                continue
+            g_odc = by[(v, K, "odc")]["speedup_vs_sync_pct"]
+            g_col = by[(v, K, "collective")]["speedup_vs_sync_pct"]
+            if g_col >= g_odc:
+                msgs.append(f"var={v}/K={K}: collective async gain "
+                            f"{g_col:.1f}% not below odc {g_odc:.1f}%")
+    # 2. the headline: async ODC >= 15% over sync at 4x spread
+    v4 = max(variances)
+    best = max(by[(v4, K, "odc")]["speedup_vs_sync_pct"]
+               for K in klist if K >= 1)
+    if best < 15.0:
+        msgs.append(f"var={v4}: best async-ODC speedup {best:.1f}% < 15%")
+    return msgs
+
+
+def emit_json(rows, path=BENCH_JSON):
+    from benchmarks.common import write_bench_json
+    return write_bench_json(
+        path, "async_sweep",
+        {"world": WORLD, "minibs": MINIBS, "max_tokens": MAX_TOKENS,
+         "waves": WAVES, "seeds": SEEDS,
+         "variances": list(VARIANCES), "staleness": list(STALENESS),
+         "time_per_token": TIME_PER_TOKEN, "sim_overlap_fraction": 0.0},
+        rows)
+
+
+def main():
+    from benchmarks.common import emit
+    rows = run()
+    emit(rows)
+    path = emit_json(rows)
+    print(f"# wrote {path}")
+    msgs = validate(rows)
+    print("# validation:", "OK" if not msgs else "; ".join(msgs))
+    return 0 if not msgs else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

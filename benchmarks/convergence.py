@@ -17,7 +17,7 @@ def run(steps=10, arch="qwen-1.5b"):
     from repro.configs import get_reduced
     from repro.core.gspmd import GSPMDConfig, ShardingRules, make_train_step
     from repro.launch.mesh import make_host_mesh
-    from repro.launch.train import build_minibatch
+    from repro.data import build_minibatch
     from repro.models import transformer as T
     from repro.optim import AdamWConfig, adamw_init
 
@@ -53,7 +53,7 @@ def run(steps=10, arch="qwen-1.5b"):
         ls = []
         for i in range(steps):
             plan, toks = make_step_data(i, rng)
-            batch = build_minibatch(plan, toks, 256, world)
+            batch = build_minibatch(plan, toks, 256)
             with mesh:
                 params, opt, metrics = step(params, opt, batch)
             ls.append(float(metrics["loss"]))

@@ -4,6 +4,13 @@ Methods: Collective Native (verl's two-level partitioning, Listing 2),
 Collective LB-Micro, ODC LB-Micro, ODC LB-Mini.  The verl-optimized
 ordering (Listing 3) is what our lb_micro applies per minibatch.
 
+Timing routes through the posttrain pipeline model
+(``sim.simulate_posttrain``, scheme='sync') with free generation and
+free weight push — the paper's measurement convention (rollout time
+excluded), expressed as a degenerate case of the same pipeline the
+async sweep (``benchmarks/async_sweep.py``) exercises, so the two
+benchmarks cannot drift apart.
+
 Validation targets (paper):
   * LB-Micro substantially faster than Native;
   * ODC adds a further (smaller than SFT) gain, ~5-10%;
@@ -15,10 +22,21 @@ import numpy as np
 
 from repro.balance import STRATEGIES, verl_native
 from repro.data import sample_lengths
-from repro.sim import simulate_minibatch
+from repro.sim import GenModel, simulate_posttrain
 
 WORLD = 8
 MAX_TOKENS = 16_384
+
+#: rollout time excluded (paper convention): generation and weight push
+#: are free, so the pipeline reduces to pure training makespans
+TRAIN_ONLY = GenModel(time_per_token=0.0, push_layers=0)
+
+
+def _train_time(plans_and_lens, scheme):
+    """Total training wall-clock of a sequence of minibatches, as the
+    synchronous posttrain pipeline with free generation."""
+    return simulate_posttrain(plans_and_lens, scheme="sync", comm=scheme,
+                              gen=TRAIN_ONLY).makespan
 
 
 def run(minibs=(2, 4, 8, 16), world=WORLD, max_tokens=MAX_TOKENS, seeds=8):
@@ -31,9 +49,7 @@ def run(minibs=(2, 4, 8, 16), world=WORLD, max_tokens=MAX_TOKENS, seeds=8):
             lens = sample_lengths("aime", world * mb * 4, s).tolist()
             lens = [min(l, max_tokens) for l in lens]
             plans = verl_native(lens, world, max_tokens, minibatch_size=mb)
-            total_t = sum(
-                simulate_minibatch(p, lens, scheme="collective").makespan
-                for p in plans)
+            total_t = _train_time([(p, lens) for p in plans], "collective")
             sps_n.append(len(lens) / total_t)
         per[("native", "collective")] = float(np.mean(sps_n))
 
@@ -46,8 +62,8 @@ def run(minibs=(2, 4, 8, 16), world=WORLD, max_tokens=MAX_TOKENS, seeds=8):
                     lens = sample_lengths("aime", world * mb, s).tolist()
                     lens = [min(l, max_tokens) for l in lens]
                     plan = STRATEGIES[strat](lens, world, max_tokens)
-                    r = simulate_minibatch(plan, lens, scheme=scheme)
-                    sps.append(len(lens) / r.makespan)
+                    sps.append(len(lens) / _train_time([(plan, lens)],
+                                                       scheme))
                 per[(strat, scheme)] = float(np.mean(sps))
 
         base = per[("lb_micro", "collective")]

@@ -10,6 +10,9 @@
   straggler_sweep  (ours)               LB-Mini-Het vs collective under skew
   hier_sweep       (ours)               hierarchical (node × device) ODC vs
                                         flat collective/ODC, nodes × skew
+  async_sweep      (ours)               async rollout→train dispatch vs the
+                                        synchronous loop, staleness ×
+                                        length variance × comm backend
   roofline         (ours)               dry-run roofline table
 
 ``python -m benchmarks.run [module ...]`` — no args runs everything.
@@ -34,6 +37,7 @@ ALL = [
     "straggler",
     "straggler_sweep",
     "hier_sweep",
+    "async_sweep",
     "roofline",
 ]
 

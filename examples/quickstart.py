@@ -22,7 +22,7 @@ from repro.core.gspmd import GSPMDConfig, ShardingRules, make_train_step
 from repro.data import sample_lengths
 from repro.launch import hlo as H
 from repro.launch.mesh import make_host_mesh
-from repro.launch.train import build_minibatch
+from repro.data import build_minibatch
 from repro.models import transformer as T
 from repro.optim import AdamWConfig, adamw_init
 
@@ -44,7 +44,7 @@ def main():
     rng = np.random.RandomState(0)
     toks = [rng.randint(1, cfg.vocab_size, size=int(s)).astype(np.int32)
             for s in lens]
-    batch = build_minibatch(plan, toks, 256, world)
+    batch = build_minibatch(plan, toks, 256)
 
     # --- 2. one step, both communication schemes -------------------------
     params = T.init_params(cfg, jax.random.PRNGKey(0))

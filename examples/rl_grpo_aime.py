@@ -1,10 +1,16 @@
 """GRPO-style RL post-training loop on AIME-like prompts (paper §5.1 RL).
 
-Implements the training phase the paper times: grouped rollouts with
-Dr.GRPO advantages (group-mean-subtracted rewards) become advantage-
-weighted token losses; the minibatch is balanced with LB-Mini and trained
-through the ODC engine.  Rollout generation is a synthetic sampler (the
-paper also excludes rollout time from its measurements).
+Routes through the asynchronous post-training subsystem
+(``repro.posttrain``): grouped rollouts with Dr.GRPO advantages
+(group-mean-subtracted rewards) land in the RolloutBuffer, are balanced
+with LB-Mini and trained through the ODC engine.  With the default
+``--staleness 0`` the pipeline replays the classic synchronous
+alternating loop bit for bit (golden-tested in
+``tests/test_posttrain.py``); ``--staleness K`` lets the generator run K
+waves ahead.  Rollout content is the synthetic sampler (the paper also
+excludes rollout time from its measurements) — see
+``repro.launch.posttrain --rollout engine`` for real prefill/decode
+rollouts.
 
 Run:  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       PYTHONPATH=src python examples/rl_grpo_aime.py --iters 4
@@ -16,39 +22,13 @@ os.environ.setdefault("XLA_FLAGS",
                       "--xla_force_host_platform_device_count=8")
 
 import jax
-import numpy as np
 
-from repro.balance import lb_mini
 from repro.configs import get_reduced
 from repro.core.gspmd import GSPMDConfig, ShardingRules, make_train_step
-from repro.data.loader import grpo_batch
-from repro.data.packing import pack_plan_to_batches
 from repro.launch.mesh import make_host_mesh
 from repro.models import transformer as T
 from repro.optim import AdamWConfig, adamw_init
-
-
-def build_weighted_minibatch(plan, sample_tokens, advantages, buffer_len,
-                             world):
-    """Like launch.train.build_minibatch, but scales each sample's loss
-    mask by its (signed) GRPO advantage."""
-    import jax.numpy as jnp
-    M = max(plan.max_microbatches, 1)
-    per_dev = []
-    for dev in plan.assignments:
-        mbs = list(dev) + [[] for _ in range(M - len(dev))]
-        d = pack_plan_to_batches(mbs, sample_tokens, buffer_len)
-        # rescale loss_mask by advantage via segment lookup
-        for m, mb in enumerate(mbs):
-            for seg, idx in enumerate(mb):
-                row = d["segment_ids"][m, 0]
-                d["loss_mask"][m, 0] = np.where(
-                    row == seg, d["loss_mask"][m, 0] * advantages[idx],
-                    d["loss_mask"][m, 0])
-        per_dev.append(d)
-    batch = {k: np.concatenate([d[k] for d in per_dev], axis=1)
-             for k in per_dev[0]}
-    return {k: jnp.asarray(v) for k, v in batch.items()}
+from repro.posttrain import GRPOTask, PostTrainPipeline
 
 
 def main():
@@ -56,6 +36,8 @@ def main():
     ap.add_argument("--iters", type=int, default=4)
     ap.add_argument("--prompts", type=int, default=8)
     ap.add_argument("--group", type=int, default=4)
+    ap.add_argument("--staleness", type=int, default=0,
+                    help="SSP bound: generator may run K waves ahead")
     args = ap.parse_args()
 
     cfg = get_reduced("qwen-1.5b")
@@ -68,17 +50,16 @@ def main():
     opt = adamw_init(params)
 
     print(f"[grpo] {cfg.name} world={world} prompts={args.prompts} "
-          f"group={args.group}")
-    for it in range(args.iters):
-        toks, adv, lens = grpo_batch(args.prompts, args.group,
-                                     cfg.vocab_size, max_len=192, seed=it)
-        plan = lb_mini([int(l) for l in lens], world, max_tokens=256)
-        batch = build_weighted_minibatch(plan, toks, adv, 256, world)
-        with mesh:
-            params, opt, metrics = step(params, opt, batch)
-        print(f"[grpo] iter {it} weighted-loss={float(metrics['loss']):+.5f} "
-              f"rollouts={len(lens)} "
-              f"microbatches={[len(d) for d in plan.assignments]}")
+          f"group={args.group} staleness={args.staleness}")
+    task = GRPOTask(vocab_size=cfg.vocab_size, prompts=args.prompts,
+                    group=args.group, max_len=192, max_tokens=256)
+    pipe = PostTrainPipeline(task=task, step_fn=step, mesh=mesh,
+                             world=world, staleness=args.staleness)
+    _, _, metrics = pipe.run(args.iters, params, opt, verbose=False)
+    for m in metrics:
+        print(f"[grpo] iter {m['step']} weighted-loss={m['loss']:+.5f} "
+              f"rollouts={m['rollouts']} staleness={m['staleness']} "
+              f"microbatches={m['microbatches']}")
     print("[grpo] done")
     return 0
 

@@ -35,7 +35,7 @@ def main():
         "--max-len", "192",
         "--lr", "3e-3",
         "--ckpt-dir", "/tmp/repro_sft_ckpt",
-        "--ckpt-every", "100",
+        "--save-every", "100",
     ])
 
 

@@ -12,6 +12,7 @@ from repro.balance.strategies import (  # noqa: F401
     lb_mini,
     lb_mini_het,
     local_sort,
+    make_plan,
     microbatch_partition,
     minibatch_partition,
     verl_native,

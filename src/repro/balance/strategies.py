@@ -345,3 +345,17 @@ STRATEGIES = {
     "lb_mini": lb_mini,
     "lb_mini_het": lb_mini_het,
 }
+
+
+def make_plan(seqlens: Sequence[int], world_size: int, max_tokens: int, *,
+              strategy: str = "lb_mini",
+              cost_model: CostModel = DEFAULT_COST_MODEL,
+              profile: Optional[DeviceProfile] = None) -> Plan:
+    """Resolve a strategy name and balance one minibatch — the single entry
+    point shared by the loaders, the posttrain dispatch queue, and the
+    drivers (only ``lb_mini_het`` takes a device profile, so callers no
+    longer special-case the kwarg)."""
+    fn = STRATEGIES[strategy]
+    kw = {"profile": profile} if strategy == "lb_mini_het" else {}
+    return fn([int(l) for l in seqlens], world_size, max_tokens, cost_model,
+              **kw)

@@ -1,1 +1,5 @@
-from repro.checkpoint.io import load_checkpoint, save_checkpoint  # noqa: F401
+from repro.checkpoint.io import (  # noqa: F401
+    latest_step,
+    load_checkpoint,
+    save_checkpoint,
+)

@@ -16,7 +16,13 @@ side of one communication strategy:
     in ``repro.kernels``), where one exists;
   * its simulator cost hook (``layer_comm_time``) and barrier
     ``discipline`` (how ``repro.sim`` schedules it: per-layer lockstep,
-    independent device progress, or pipelined prefetch).
+    independent device progress, or pipelined prefetch);
+  * the posttrain **weight push** (``weight_push`` / ``weight_push_time`` /
+    ``push_blocks_trainer``): the trainer→generator parameter refresh the
+    asynchronous rollout pipeline (``repro.posttrain``) issues between
+    minibatches — the same bytes as a gather, but one-sided and
+    non-differentiable, so p2p backends refresh the generator without a
+    trainer-side barrier while 'collective' stalls every trainer device.
 
 Registered backends (canonical name → semantics):
 
@@ -81,6 +87,12 @@ class CommBackend:
     discipline: str = "independent"
     #: engine schedule this backend forces (None = honor the caller's knob)
     implied_schedule: Optional[str] = None
+    #: whether a trainer→generator weight push stalls the TRAINER: a fused
+    #: collective broadcast is a barrier every trainer device joins, while
+    #: the p2p backends push one-sided (the generator pulls shards without
+    #: interrupting the owner's compute — paper §3.2's non-intrusive
+    #: property, the whole point of the posttrain weight-push primitive).
+    push_blocks_trainer: bool = False
 
     # -- executable primitives (inside shard_map) ---------------------------
     def gather(self, x, axis_name: AxisNames, *,
@@ -128,6 +140,36 @@ class CommBackend:
 
         gather.defvjp(fwd, bwd)
         return gather
+
+    # -- posttrain weight push ---------------------------------------------
+    def weight_push(self, axis_name: AxisNames, *, dim: int = 0,
+                    device_profile: Optional[DeviceProfile] = None):
+        """Non-differentiable shard refresh: trainer shard -> materialized
+        tensor for a generator-side consumer (``repro.posttrain``).  The
+        same bytes move as in ``param_gather``'s forward — p2p ring for the
+        ODC family, fused all-gather for 'collective' — but no VJP is
+        attached (rollout generation never differentiates through the
+        push) and gradients are explicitly stopped."""
+        g_fn = functools.partial(self.gather, axis_name=axis_name,
+                                 device_profile=device_profile)
+
+        def push(x):
+            x = jax.lax.stop_gradient(x)
+            if dim == 0:
+                return g_fn(x)
+            return jnp.moveaxis(g_fn(jnp.moveaxis(x, dim, 0)), 0, dim)
+
+        return push
+
+    def weight_push_time(self, comm_model, devices: int,
+                         layers: int) -> float:
+        """Seconds one full trainer→generator parameter refresh costs in
+        ``repro.sim``'s posttrain model: ``layers`` per-layer shard sets
+        moved with this backend's wire cost.  Whether the TRAINER also
+        stalls for it is ``push_blocks_trainer``."""
+        if layers <= 0:
+            return 0.0
+        return layers * self.layer_comm_time(comm_model, devices)
 
     # -- hardware realization (Pallas one-sided remote DMA) -----------------
     #: whether repro.kernels carries a one-sided remote-DMA realization of
@@ -209,6 +251,7 @@ class CollectiveBackend(CommBackend):
 
     name = "collective"
     discipline = "lockstep"
+    push_blocks_trainer = True  # a fused broadcast is a global barrier
 
     def gather(self, x, axis_name, *, device_profile=None):
         return odc.collective_gather(x, axis_name)

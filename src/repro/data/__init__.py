@@ -1,3 +1,7 @@
-from repro.data.lengths import DATASETS, sample_lengths  # noqa: F401
-from repro.data.packing import pack_plan_to_batches, pack_sequences  # noqa: F401
+from repro.data.lengths import DATASETS, sample_lengths, scale_spread  # noqa: F401
+from repro.data.packing import (  # noqa: F401
+    build_minibatch,
+    pack_plan_to_batches,
+    pack_sequences,
+)
 from repro.data.loader import SyntheticSFTLoader, grpo_batch  # noqa: F401

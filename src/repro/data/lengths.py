@@ -58,3 +58,17 @@ def sample_lengths(dataset: str, n: int, seed: int = 0,
         lens = lens * (max_len / spec.max_len)
         lens = np.clip(lens, spec.min_len, max_len)
     return lens.astype(np.int64)
+
+
+def scale_spread(lens: np.ndarray, factor: float,
+                 min_len: int = 1) -> np.ndarray:
+    """Stretch (factor > 1) or shrink a length sample's spread around its
+    mean without moving the mean: ``l' = mean + (l - mean) * factor``,
+    floored at ``min_len``.  ``factor=1`` returns the input bit-identically.
+    Used by the posttrain sweeps to dial rollout-length variance while
+    holding total work roughly constant."""
+    if factor == 1.0:
+        return lens
+    lens = np.asarray(lens, np.float64)
+    out = lens.mean() + (lens - lens.mean()) * factor
+    return np.maximum(out, min_len).astype(np.int64)

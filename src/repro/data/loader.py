@@ -16,8 +16,8 @@ from typing import Iterator, Optional
 import numpy as np
 
 from repro.balance.cost import CostModel, DEFAULT_COST_MODEL, DeviceProfile
-from repro.balance.strategies import STRATEGIES, Plan
-from repro.data.lengths import sample_lengths
+from repro.balance.strategies import STRATEGIES, Plan, make_plan
+from repro.data.lengths import sample_lengths, scale_spread
 
 
 class SyntheticSFTLoader:
@@ -38,34 +38,47 @@ class SyntheticSFTLoader:
         self.seed = seed
         self.device_profile = device_profile
 
-    def steps(self, num_steps: int) -> Iterator[dict]:
+    def steps(self, num_steps: int, skip: int = 0) -> Iterator[dict]:
+        """Yield per-step batches.  ``skip`` fast-forwards a resumed run:
+        the first ``skip`` steps advance the sequential token rng (so the
+        stream stays bit-identical to an uninterrupted run) but skip the
+        balancer — plans are pure functions of the per-step-seeded
+        lengths, so nothing else needs replaying."""
         rng = np.random.RandomState(self.seed)
         for step in range(num_steps):
             n = self.world * self.mb_per_dev
             lens = sample_lengths(self.dataset, n, seed=self.seed + step,
                                   max_len=self.max_len)
             lens = np.minimum(lens, self.max_tokens)
-            kw = ({"profile": self.device_profile}
-                  if self.strategy_name == "lb_mini_het" else {})
-            plan: Plan = self.strategy(
-                lens.tolist(), self.world, self.max_tokens, self.cost_model,
-                **kw)
             # zipf-distributed tokens: a learnable unigram structure, so the
             # example drivers show real loss descent below ln(V)
             toks = [np.minimum(rng.zipf(1.3, size=int(s)),
                                self.vocab - 1).astype(np.int32)
                     for s in lens]
+            if step < skip:
+                continue
+            plan: Plan = make_plan(
+                lens, self.world, self.max_tokens,
+                strategy=self.strategy_name, cost_model=self.cost_model,
+                profile=self.device_profile)
             yield {"plan": plan, "lengths": lens, "sample_tokens": toks}
 
 
 def grpo_batch(num_prompts: int, group_size: int, vocab_size: int,
-               max_len: int = 4096, seed: int = 0):
+               max_len: int = 4096, seed: int = 0,
+               length_variance: float = 1.0):
     """Grouped rollouts with normalized advantages (Dr.GRPO-style: group
     mean subtracted, no std division).  Returns (sample_tokens, advantages,
-    lengths)."""
+    lengths).
+
+    ``length_variance`` stretches the rollout-length spread around its mean
+    (``lengths.scale_spread``) — the knob the async-dispatch sweep turns;
+    1.0 leaves the AIME distribution bit-identical to before.
+    """
     rng = np.random.RandomState(seed)
     lens = sample_lengths("aime", num_prompts * group_size, seed=seed,
                           max_len=max_len)
+    lens = np.minimum(scale_spread(lens, length_variance), max_len)
     toks = [rng.randint(1, vocab_size, size=int(s)).astype(np.int32)
             for s in lens]
     rewards = rng.rand(num_prompts, group_size)

@@ -4,10 +4,17 @@ Packing concatenates multiple samples into one (buffer_len,) sequence;
 ``segment_ids`` keep attention from crossing sample boundaries
 (cross-contamination-free packing, Krell et al. 2021) and ``positions``
 restart per sample (RoPE correctness).  Loss masks cover real tokens only.
+
+``build_minibatch`` is the plan-level assembly step shared by every
+driver (``launch.train``, ``launch.posttrain``, the GRPO example): a
+balance ``Plan`` + per-sample token arrays -> the (M, W, S) global
+microbatch stack, with optional per-sample advantage weights folded into
+``loss_mask`` (signed weights — the loss kernel treats |mask| as token
+weight, sign as advantage direction).
 """
 from __future__ import annotations
 
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -55,3 +62,45 @@ def pack_plan_to_batches(plan_microbatches: Sequence[Sequence[int]],
         k: np.stack([r[k] for r in rows])[:, None, :]
         for k in rows[0]
     }
+
+
+def build_minibatch(plan, sample_tokens: Sequence[np.ndarray],
+                    buffer_len: int, *,
+                    advantages: Optional[Sequence[float]] = None,
+                    extras=None, pad_id: int = 0):
+    """Assemble the (M, W, S) global microbatch stack from a balance plan;
+    devices with fewer microbatches are padded with empty rows.
+
+    advantages  per-GLOBAL-sample weights (e.g. Dr.GRPO group-mean-zero
+                advantages): each sample's loss-mask segment is scaled by
+                its (signed) advantage.
+    extras      {name: fn(M, world) -> array} appended to the batch (stub
+                modality embeddings in the drivers).
+
+    Returns jnp arrays, ready for a jitted train step.
+    """
+    import jax.numpy as jnp  # deferred: keep repro.data importable sans jax
+
+    M = max(plan.max_microbatches, 1)
+    world = plan.world_size
+    per_dev = []
+    for dev in plan.assignments:
+        mbs = list(dev) + [[] for _ in range(M - len(dev))]
+        d = pack_plan_to_batches(mbs, sample_tokens, buffer_len, pad_id)
+        if advantages is not None:
+            # rescale each sample's loss-mask segment by its advantage
+            for m, mb in enumerate(mbs):
+                for seg, idx in enumerate(mb):
+                    row = d["segment_ids"][m, 0]
+                    d["loss_mask"][m, 0] = np.where(
+                        row == seg, d["loss_mask"][m, 0] * advantages[idx],
+                        d["loss_mask"][m, 0])
+        per_dev.append(d)
+    batch = {
+        k: np.concatenate([d[k] for d in per_dev], axis=1)
+        for k in per_dev[0]
+    }
+    if extras:  # e.g. stub modality embeddings
+        for k, v in extras.items():
+            batch[k] = v(M, world)
+    return {k: jnp.asarray(v) for k, v in batch.items()}

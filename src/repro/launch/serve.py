@@ -1,8 +1,9 @@
 """Batched serving driver: prefill a request batch, then decode greedily.
 
-Uses the same GSPMD sharding rules as training (params over data+model,
-KV cache over batch/model) and the prefill/decode steps from
-``repro.core.gspmd``.
+A thin CLI over ``repro.posttrain.GenerationEngine`` — the same
+prefill/decode path (GSPMD sharding rules shared with training, KV cache
+over batch/model) that the asynchronous post-training pipeline's rollout
+workers use; this driver is the fixed-length serving face of it.
 
 Example (CPU, reduced config):
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
@@ -12,17 +13,15 @@ Example (CPU, reduced config):
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config, get_reduced
-from repro.core.gspmd import (
-    GSPMDConfig, ShardingRules, make_decode_step, make_prefill_step,
-)
+from repro.core.gspmd import GSPMDConfig, ShardingRules
 from repro.launch.mesh import make_host_mesh
 from repro.models import transformer as T
+from repro.posttrain.engine import GenerationEngine
 
 
 def main(argv=None):
@@ -46,43 +45,23 @@ def main(argv=None):
     key = jax.random.PRNGKey(args.seed)
     params = T.init_params(cfg, key)
     B, S = args.batch, args.prompt_len
-    max_len = S + args.gen
     tokens = jax.random.randint(key, (B, S), 1, cfg.vocab_size)
-    enc_len = S if cfg.family == "audio" else 0
-    cache = T.init_cache(cfg, B, max_len, enc_len=enc_len)
-
-    prefill = jax.jit(make_prefill_step(cfg, mesh, gcfg))
-    decode = jax.jit(make_decode_step(cfg, mesh, gcfg), donate_argnums=(1,))
-
-    batch = {"tokens": tokens,
-             "positions": jnp.arange(S)[None].repeat(B, 0)}
+    extras = {}
     if cfg.family == "audio":
-        batch["encoder_embeds"] = jax.random.normal(key, (B, S, cfg.d_model))
+        extras["encoder_embeds"] = jax.random.normal(key, (B, S, cfg.d_model))
     if cfg.frontend == "vision" and cfg.frontend_tokens:
         n = min(cfg.frontend_tokens, S)
-        batch["vision_embeds"] = jax.random.normal(key, (B, n, cfg.d_model))
+        extras["vision_embeds"] = jax.random.normal(key, (B, n, cfg.d_model))
 
-    t0 = time.time()
-    with mesh:
-        logits, cache = prefill(params, batch, cache)
-    next_tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-    t_prefill = time.time() - t0
-    print(f"[serve] prefill {B}x{S} in {t_prefill:.2f}s "
-          f"({B * S / t_prefill:.0f} tok/s)")
-
-    generated = [next_tok]
-    t0 = time.time()
-    for i in range(args.gen - 1):
-        with mesh:
-            logits, cache = decode(params, cache, next_tok,
-                                   jnp.int32(S + i))
-        next_tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-        generated.append(next_tok)
-    jax.block_until_ready(next_tok)
-    t_dec = time.time() - t0
-    out = jnp.concatenate(generated, axis=1)
+    engine = GenerationEngine(cfg, mesh, gcfg)
+    res = engine.generate(params, tokens, args.gen,
+                          batch_extras=extras or None)
+    print(f"[serve] prefill {B}x{S} in {res.prefill_s:.2f}s "
+          f"({B * S / max(res.prefill_s, 1e-9):.0f} tok/s)")
     print(f"[serve] decoded {args.gen - 1} steps x {B} requests in "
-          f"{t_dec:.2f}s ({B * (args.gen - 1) / max(t_dec, 1e-9):.1f} tok/s)")
+          f"{res.decode_s:.2f}s "
+          f"({B * (args.gen - 1) / max(res.decode_s, 1e-9):.1f} tok/s)")
+    out = jnp.asarray(res.generated)
     print(f"[serve] sample output ids: {out[0, :16].tolist()}")
     return 0
 

@@ -25,33 +25,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.balance.cost import CostModel
-from repro.checkpoint import save_checkpoint
+from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
 from repro.configs import get_config, get_reduced
 from repro.core import backend as backends
 from repro.core.gspmd import GSPMDConfig, ShardingRules, make_train_step
 from repro.data.loader import SyntheticSFTLoader
-from repro.data.packing import pack_plan_to_batches
+from repro.data.packing import build_minibatch  # noqa: F401 (re-export:
+#   the plan->batch assembly now lives in repro.data.packing, shared with
+#   the posttrain pipeline and the GRPO example)
 from repro.launch.mesh import make_hier_mesh, make_host_mesh
 from repro.models import transformer as T
 from repro.optim import AdamWConfig, adamw_init
-
-
-def build_minibatch(plan, sample_tokens, buffer_len, world, extras=None):
-    """Assemble the (M, W, S) global microbatch stack from a balance plan;
-    devices with fewer microbatches are padded with empty rows."""
-    M = max(plan.max_microbatches, 1)
-    per_dev = []
-    for dev in plan.assignments:
-        mbs = list(dev) + [[] for _ in range(M - len(dev))]
-        per_dev.append(pack_plan_to_batches(mbs, sample_tokens, buffer_len))
-    batch = {
-        k: np.concatenate([d[k] for d in per_dev], axis=1)
-        for k in per_dev[0]
-    }
-    if extras:  # e.g. stub modality embeddings
-        for k, v in extras.items():
-            batch[k] = v(M, world)
-    return {k: jnp.asarray(v) for k, v in batch.items()}
 
 
 def main(argv=None):
@@ -110,7 +94,14 @@ def main(argv=None):
                     help="0 = all devices on data axis")
     ap.add_argument("--model-axis", type=int, default=1)
     ap.add_argument("--ckpt-dir", default="")
-    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--save-every", "--ckpt-every", type=int, default=0,
+                    dest="save_every",
+                    help="checkpoint (params + optimizer) to --ckpt-dir "
+                         "every N steps (legacy alias: --ckpt-every)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the latest checkpoint in --ckpt-dir "
+                         "(bit-identical to an uninterrupted run: the "
+                         "loader replays the skipped steps' data stream)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -155,6 +146,21 @@ def main(argv=None):
     params = T.init_params(cfg, jax.random.PRNGKey(args.seed))
     opt_state = adamw_init(params)
 
+    start_step = 0
+    if args.resume:
+        if not args.ckpt_dir:
+            raise SystemExit("--resume needs --ckpt-dir")
+        last = latest_step(args.ckpt_dir)
+        if last is not None:
+            state = load_checkpoint(args.ckpt_dir, last,
+                                    {"params": params, "opt": opt_state})
+            params, opt_state = state["params"], state["opt"]
+            start_step = last
+            print(f"[train] resumed from {args.ckpt_dir} at step {last}")
+        else:
+            print(f"[train] --resume: no checkpoint in {args.ckpt_dir!r}, "
+                  "starting fresh")
+
     cm = CostModel(attention_free=cfg.is_attention_free,
                    window=cfg.sliding_window)
     loader = SyntheticSFTLoader(
@@ -164,22 +170,26 @@ def main(argv=None):
         max_len=args.max_len, cost_model=cm, seed=args.seed,
         device_profile=profile)
 
-    extras = None
-    if cfg.family == "audio":
-        rng = np.random.RandomState(0)
-        extras = {"encoder_embeds": lambda M, W: rng.randn(
-            M, W, 16, cfg.d_model).astype(np.float32)}
-    if cfg.frontend == "vision" and cfg.frontend_tokens:
-        rng = np.random.RandomState(0)
-        extras = {"vision_embeds": lambda M, W: rng.randn(
-            M, W, cfg.frontend_tokens, cfg.d_model).astype(np.float32)}
+    def extras_for(step):
+        """Per-step-seeded modality stubs: a resumed run regenerates the
+        exact embeddings an uninterrupted run would have drawn."""
+        if cfg.family == "audio":
+            rng = np.random.RandomState(step)
+            return {"encoder_embeds": lambda M, W: rng.randn(
+                M, W, 16, cfg.d_model).astype(np.float32)}
+        if cfg.frontend == "vision" and cfg.frontend_tokens:
+            rng = np.random.RandomState(step)
+            return {"vision_embeds": lambda M, W: rng.randn(
+                M, W, cfg.frontend_tokens, cfg.d_model).astype(np.float32)}
+        return None
 
     t_start = time.time()
     samples_done = 0
     loss = None  # no steps run yet (--steps 0 exits with a clean summary)
-    for i, step_data in enumerate(loader.steps(args.steps)):
+    for i, step_data in enumerate(loader.steps(args.steps, skip=start_step),
+                                  start=start_step):
         batch = build_minibatch(step_data["plan"], step_data["sample_tokens"],
-                                args.max_tokens, world, extras)
+                                args.max_tokens, extras=extras_for(i))
         t0 = time.time()
         with mesh:
             params, opt_state, metrics = step_fn(params, opt_state, batch)
@@ -189,7 +199,7 @@ def main(argv=None):
               f"tokens={float(metrics['tokens']):.0f} "
               f"M={step_data['plan'].max_microbatches} "
               f"dt={time.time() - t0:.2f}s")
-        if args.ckpt_dir and args.ckpt_every and (i + 1) % args.ckpt_every == 0:
+        if args.ckpt_dir and args.save_every and (i + 1) % args.save_every == 0:
             save_checkpoint(args.ckpt_dir, i + 1,
                             {"params": params, "opt": opt_state})
     dt = time.time() - t_start

@@ -1,0 +1,28 @@
+"""Asynchronous post-training orchestration (rollout→train pipeline).
+
+The subsystem where ODC's minibatch-level decoupling pays off end to end:
+a reusable generation engine produces variable-length rollouts, a
+bounded-staleness dispatch queue feeds LB-Mini-balanced minibatches to
+the trainer as soon as enough rollouts land, and an ODC weight push
+refreshes generator-side parameter shards p2p — no global barrier.
+
+    engine.GenerationEngine    batched prefill/decode (shared with serve)
+    buffer.RolloutBuffer       FIFO + staleness-bound dispatch queue
+    weight_push.make_weight_push / WeightPusher
+                               CommBackend.weight_push, jitted per config
+    tasks.GRPOTask / SFTTask   workload adapters
+    pipeline.PostTrainPipeline the orchestration loop
+
+Timing is modeled by ``repro.sim.simulate_posttrain`` (scheme='sync' vs
+'async'); ``benchmarks/async_sweep.py`` sweeps staleness × rollout-length
+variance × comm backend.
+"""
+from repro.posttrain.buffer import (  # noqa: F401
+    Rollout,
+    RolloutBuffer,
+    StalenessViolation,
+)
+from repro.posttrain.engine import GenerationEngine, GenerationResult  # noqa: F401
+from repro.posttrain.pipeline import PostTrainPipeline  # noqa: F401
+from repro.posttrain.tasks import GRPOTask, SFTTask  # noqa: F401
+from repro.posttrain.weight_push import WeightPusher, make_weight_push  # noqa: F401

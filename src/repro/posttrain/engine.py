@@ -1,0 +1,132 @@
+"""Reusable batched generation engine (prefill + greedy decode).
+
+Extracted from ``launch/serve.py`` so the serving driver and the
+asynchronous post-training pipeline (rollout workers) share ONE
+generation path: the same GSPMD sharding rules as training (params over
+data+model, KV cache over batch/model) and the prefill/decode steps from
+``repro.core.gspmd``, jitted once and reused across waves.
+
+Rollout generation differs from serving in exactly one way: rollouts are
+*variable-length*.  ``generate(stop_lengths=...)`` truncates each
+request's output at its own total length (an EOS stand-in — the synthetic
+models never emit a real stop token), which is where the length variance
+that the dispatch layer (``repro.posttrain.buffer``) must absorb
+originates.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gspmd import (
+    GSPMDConfig, make_decode_step, make_prefill_step,
+)
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    """One generation wave: per-request full sequences + bookkeeping."""
+
+    sequences: List[np.ndarray]   # prompt + generated, truncated per request
+    lengths: np.ndarray           # len(sequences[i]), int64
+    generated: np.ndarray         # (B, gen_steps) raw greedy token grid
+    prefill_s: float
+    decode_s: float
+
+    @property
+    def decode_tokens_per_s(self) -> float:
+        n = int(self.generated.shape[0] * (self.generated.shape[1] - 1))
+        return n / self.decode_s if self.decode_s > 0 else 0.0
+
+
+class GenerationEngine:
+    """Mesh-aware batched prefill/decode with a KV cache.
+
+    Jits the prefill and decode steps once per (config, mesh, gcfg);
+    ``generate`` runs a full greedy wave.  The engine is deliberately
+    params-agnostic — the posttrain pipeline hands it whatever the last
+    ODC weight push materialized.
+    """
+
+    def __init__(self, cfg: ModelConfig, mesh, gcfg: GSPMDConfig):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.gcfg = gcfg
+        self._prefill = jax.jit(make_prefill_step(cfg, mesh, gcfg))
+        self._decode = jax.jit(make_decode_step(cfg, mesh, gcfg),
+                               donate_argnums=(1,))
+
+    def init_cache(self, batch_size: int, max_len: int, *,
+                   enc_len: int = 0):
+        """Fresh KV cache.  Audio-family callers must pass ``enc_len``
+        (the encoder sequence length — ``generate`` uses the prompt
+        length, matching the serve loop)."""
+        return T.init_cache(self.cfg, batch_size, max_len, enc_len=enc_len)
+
+    def prefill(self, params, batch: Dict, cache):
+        """(last-position logits, warmed cache) for a prompt batch."""
+        with self.mesh:
+            return self._prefill(params, batch, cache)
+
+    def decode(self, params, cache, tokens, index):
+        with self.mesh:
+            return self._decode(params, cache, tokens, jnp.int32(index))
+
+    def generate(self, params, prompt_tokens, gen_steps: int, *,
+                 batch_extras: Optional[Dict] = None,
+                 stop_lengths: Optional[Sequence[int]] = None
+                 ) -> GenerationResult:
+        """Greedy-decode ``gen_steps`` tokens for a (B, S) prompt batch.
+
+        stop_lengths  per-request TOTAL sequence length (prompt included);
+                      request i's sequence is truncated there, so the wave
+                      returns variable-length rollouts from one fixed-shape
+                      decode loop.  None = every request runs to
+                      S + gen_steps.
+        """
+        prompt_tokens = jnp.asarray(prompt_tokens)
+        B, S = prompt_tokens.shape
+        max_len = S + gen_steps
+        enc_len = S if self.cfg.family == "audio" else 0
+        cache = self.init_cache(B, max_len, enc_len=enc_len)
+        batch = {"tokens": prompt_tokens,
+                 "positions": jnp.arange(S)[None].repeat(B, 0)}
+        if batch_extras:
+            batch.update(batch_extras)
+
+        t0 = time.time()
+        logits, cache = self.prefill(params, batch, cache)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        jax.block_until_ready(next_tok)
+        prefill_s = time.time() - t0
+
+        generated = [next_tok]
+        t0 = time.time()
+        for i in range(gen_steps - 1):
+            logits, cache = self.decode(params, cache, next_tok, S + i)
+            next_tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+            generated.append(next_tok)
+        jax.block_until_ready(next_tok)
+        decode_s = time.time() - t0
+
+        grid = np.asarray(jnp.concatenate(generated, axis=1))
+        prompts = np.asarray(prompt_tokens)
+        if stop_lengths is None:
+            stops = np.full((B,), max_len, np.int64)
+        else:
+            stops = np.clip(np.asarray(stop_lengths, np.int64), S + 1,
+                            max_len)
+        seqs = [np.concatenate([prompts[b], grid[b, : stops[b] - S]])
+                .astype(np.int32) for b in range(B)]
+        return GenerationResult(
+            sequences=seqs,
+            lengths=np.asarray([len(s) for s in seqs], np.int64),
+            generated=grid, prefill_s=prefill_s, decode_s=decode_s,
+        )

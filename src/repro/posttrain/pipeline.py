@@ -1,0 +1,121 @@
+"""The rollout→train orchestration loop with bounded staleness.
+
+Dataflow (one arrow per subsystem seam):
+
+    generator (GenerationEngine / synthetic sampler)
+        │ variable-length rollouts, tagged with their weight version
+        ▼
+    RolloutBuffer  — FIFO dispatch queue, staleness bound enforced
+        │ minibatch's worth, as soon as enough rollouts landed
+        ▼
+    balancer (LB-Mini / LB-Mini-Het via balance.make_plan)
+        ▼
+    trainer (GSPMD FSDP±ODC train step)
+        │ after each optimizer step
+        ▼
+    ODC weight push (CommBackend.weight_push) ──▶ generator params
+
+Staleness semantics (SSP on top of ODC, paper §6.2): wave ``w`` —
+consumed by train step ``w`` — may be generated under weights that are at
+most ``staleness`` versions old (``w - version <= K``).  The driver loop
+is single-process, so the generator/trainer *overlap* is scheduled, not
+wall-clock-parallel (``repro.sim.simulate_posttrain`` models the
+timing); what the loop realizes exactly is the **ordering contract**:
+
+  * K = 0 — push, generate the full wave, train: the synchronous
+    alternating loop, bit for bit (golden-tested);
+  * K ≥ 1 — the generator runs up to K waves ahead of the trainer on
+    weights it last pulled, and the buffer proves every dispatched
+    rollout honored the bound.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, List, Optional
+
+from repro.posttrain.buffer import RolloutBuffer
+
+
+@dataclasses.dataclass
+class PostTrainPipeline:
+    """Orchestrates task ⇄ buffer ⇄ trainer ⇄ weight push.
+
+    task         a GRPOTask / SFTTask adapter
+    step_fn      jitted (params, opt_state, batch) -> (params, opt, metrics)
+    mesh         train mesh (step_fn runs under its context)
+    world        FSDP world size (balancer width)
+    staleness    SSP bound K (0 = synchronous)
+    pusher       optional WeightPusher; None = hand the trainer's own
+                 params to the generator (synthetic rollout sources never
+                 read them, so sync-loop replays skip the push traffic)
+    """
+
+    task: Any
+    step_fn: Callable
+    mesh: Any
+    world: int
+    staleness: int = 0
+    pusher: Optional[Any] = None
+
+    def __post_init__(self):
+        self.buffer = RolloutBuffer(self.staleness)
+        self.next_wave = 0
+        self.trained = 0
+        self.metrics: List[dict] = []
+
+    # -- generator side -----------------------------------------------------
+    def _gen_params(self, params):
+        if self.pusher is None:
+            return params, self.trained
+        if self.pusher.version < self.trained:
+            self.pusher.push(params, self.trained)
+        return self.pusher.params, self.pusher.version
+
+    def _fill(self, params, total_iters: int):
+        """Generate every wave the staleness bound currently allows:
+        wave w needs weights of version >= w - K, and the generator holds
+        version ``trained`` — so waves up to trained + K are legal."""
+        while (self.next_wave < total_iters
+               and self.next_wave <= self.trained + self.staleness):
+            gp, gv = self._gen_params(params)
+            wave = self.task.generate_wave(self.next_wave, gp, gv)
+            self.buffer.put(wave, gv)
+            self.next_wave += 1
+
+    # -- the loop -----------------------------------------------------------
+    def run(self, iters: int, params, opt_state, *, verbose: bool = True):
+        """Run ``iters`` MORE train steps; returns (params, opt_state,
+        metrics: one dict per NEW step with loss/tokens/staleness/
+        microbatch shape).  Re-entrant: a second call continues the same
+        schedule — wave indices, versions and the FIFO stream carry on,
+        so ``run(2); run(2)`` consumes the exact sample stream of
+        ``run(4)`` (rollouts can only be generated *fresher*, never
+        staler, than the single-call schedule)."""
+        first_new = len(self.metrics)
+        total = self.trained + iters
+        for t in range(self.trained, total):
+            self._fill(params, total)
+            rollouts = self.buffer.pop(self.task.wave_size, train_step=t)
+            plan, batch = self.task.build_batch(rollouts, self.world)
+            t0 = time.time()
+            with self.mesh:
+                params, opt_state, m = self.step_fn(params, opt_state, batch)
+            self.trained = t + 1
+            row = {
+                "step": t,
+                "loss": float(m["loss"]),
+                "tokens": float(m["tokens"]),
+                "rollouts": len(rollouts),
+                "staleness": max(t - r.version for r in rollouts),
+                "microbatches": [len(d) for d in plan.assignments],
+                "dt": time.time() - t0,
+                "pushes": self.pusher.pushes if self.pusher else 0,
+            }
+            self.metrics.append(row)
+            if verbose:
+                print(f"[posttrain] step {t:4d} loss={row['loss']:+.5f} "
+                      f"rollouts={row['rollouts']} "
+                      f"staleness={row['staleness']} "
+                      f"M={plan.max_microbatches} dt={row['dt']:.2f}s")
+        return params, opt_state, self.metrics[first_new:]

@@ -1,0 +1,98 @@
+"""ODC weight push: trainer shards -> materialized generator params.
+
+Between training minibatches the generator's parameter copy must be
+refreshed from the trainer's FSDP shards.  This is the posttrain face of
+the paper's §3 primitives: the SAME per-parameter gather the training
+step runs (p2p ring for 'odc', fused all-gather for 'collective',
+two-tier for 'hier'), but one-sided and outside AD —
+``CommBackend.weight_push`` — so for the p2p backends the refresh rides
+the decentralized-PS path with **no global barrier**: each generator-side
+consumer pulls shards from the owners without interrupting their compute
+(``push_blocks_trainer`` is False for the ODC family, True for
+'collective'; ``repro.sim.simulate_posttrain`` charges the timing).
+
+On a single bulk-synchronous host the asynchrony itself cannot be
+realized (same caveat as the training engines); what this module realizes
+is the communication schedule — the lowered HLO of a push carries the
+backend's permute chains / collectives, and the returned params are
+bit-identical to the trainer's (gather is exact).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.core import backend as B
+from repro.core.gspmd import (
+    GSPMDConfig, _data_dims, _keep_axes, param_pspecs,
+)
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+
+def make_weight_push(cfg: ModelConfig, mesh, gcfg: GSPMDConfig):
+    """Returns ``push(params) -> params_full``: every FSDP-sharded leaf
+    gathered over the manual (data, pod) axes with the configured comm
+    backend, leaving any model-axis tensor parallelism to GSPMD.  Jitted;
+    call under the mesh context."""
+    rules = gcfg.rules
+    backend = B.get_backend(gcfg.comm)
+    da = rules.data if isinstance(rules.data, tuple) else (rules.data,)
+    manual = tuple(da) + ((rules.pod,) if rules.pod else ())
+
+    params_shape = jax.eval_shape(
+        lambda k: T.init_params(cfg, k, gcfg.param_dtype),
+        jax.random.PRNGKey(0))
+    pspecs = param_pspecs(cfg, params_shape, rules, mesh)
+    manual_pspecs = jax.tree.map(lambda s: _keep_axes(s, manual), pspecs,
+                                 is_leaf=lambda x: isinstance(x, P))
+    out_specs = jax.tree.map(lambda s: P(*([None] * len(s))), manual_pspecs,
+                             is_leaf=lambda x: isinstance(x, P))
+
+    def push_local(params_local):
+        def g(leaf, spec):
+            dd = _data_dims(spec, da)
+            if not dd:
+                return leaf  # replicated over the FSDP axes already
+            dim, axes = dd[0]
+            ax = axes if len(axes) > 1 else axes[0]
+            return backend.weight_push(
+                ax, dim=dim, device_profile=gcfg.device_profile)(leaf)
+
+        return jax.tree.map(g, params_local, pspecs)
+
+    sharded = compat.shard_map(
+        push_local, mesh=mesh, in_specs=(manual_pspecs,),
+        out_specs=out_specs, check_vma=False, axis_names=set(manual))
+    return jax.jit(sharded)
+
+
+@dataclasses.dataclass
+class WeightPusher:
+    """Stateful wrapper: push + version bookkeeping for the pipeline.
+
+    ``push(params, version)`` refreshes the generator copy and records the
+    trainer version it now holds; ``pushes`` counts refreshes so drivers
+    can report push traffic alongside staleness.
+    """
+
+    cfg: ModelConfig
+    mesh: Any
+    gcfg: GSPMDConfig
+    version: int = -1
+    pushes: int = 0
+
+    def __post_init__(self):
+        self._fn = make_weight_push(self.cfg, self.mesh, self.gcfg)
+        self.params = None
+
+    def push(self, params, version: int):
+        with self.mesh:
+            self.params = self._fn(params)
+        self.version = version
+        self.pushes += 1
+        return self.params

@@ -1,9 +1,12 @@
 from repro.balance.cost import DeviceProfile, make_straggler_profile  # noqa: F401
 from repro.sim.engine import (  # noqa: F401
     CommModel,
+    GenModel,
+    PosttrainResult,
     SimConfig,
     SimResult,
     bubble_rate,
     simulate_minibatch,
+    simulate_posttrain,
     simulate_training,
 )

@@ -335,3 +335,124 @@ def simulate_training(steps, *, scheme: str, cfg: SimConfig = SimConfig(),
         f = [max(f[d], gate) + busy[t][d] for d in range(D)]
         barrier[t + 1] = max(f)
     return barrier[T]
+
+
+# ===========================================================================
+# post-training pipeline: rollout generation ⇄ training with ODC weight push
+# ===========================================================================
+@dataclasses.dataclass(frozen=True)
+class GenModel:
+    """Rollout-generation cost model for ``simulate_posttrain``.
+
+    Generation is decode-bound and data-parallel: ``slots`` independent
+    decode streams (0 = one per training device, the colocated layout)
+    each produce one rollout at a time at ``time_per_token`` seconds per
+    generated token.  Rollouts are assigned to streams greedily in FIFO
+    arrival order (each free stream takes the next queued rollout — the
+    dispatch order the RolloutBuffer preserves, NOT a length-sorted LPT
+    schedule), gated by the most recent weight push the staleness bound
+    demands.
+
+    ``push_layers``: how many per-layer shard sets one trainer→generator
+    weight push moves (None = every layer, i.e. ``SimConfig.num_layers``;
+    0 = free push, which — together with ``time_per_token=0`` — reduces
+    the pipeline to pure training time, the paper's rollout-excluded
+    measurement convention used by ``benchmarks/rl_throughput.py``).
+    """
+
+    time_per_token: float = 4e-5
+    slots: int = 0
+    push_layers: Optional[int] = None
+
+
+@dataclasses.dataclass
+class PosttrainResult:
+    makespan: float
+    gen_time: List[float]      # per-step wall-clock when the wave completed
+    train_start: List[float]
+    train_finish: List[float]
+    observed_staleness: List[int]  # per-step (train step - weight version)
+
+    @property
+    def trainer_idle(self) -> float:
+        """Seconds the trainer spent waiting on rollouts / push barriers."""
+        busy = sum(f - s for s, f in zip(self.train_start,
+                                         self.train_finish))
+        return max(0.0, self.makespan - busy)
+
+
+def simulate_posttrain(steps, *, scheme: str = "async", comm: str = "odc",
+                       staleness: int = 1, cfg: SimConfig = SimConfig(),
+                       gen: GenModel = GenModel(),
+                       profile: Optional[DeviceProfile] = None
+                       ) -> PosttrainResult:
+    """Makespan of a rollout→train post-training pipeline (``steps``: list
+    of (plan, rollout seqlens); train step t consumes wave t).
+
+    scheme='sync'   the alternating loop: push weights, generate the whole
+                    wave, train, repeat — generation wave t cannot start
+                    before train step t-1 finished (staleness forced 0).
+    scheme='async'  bounded-staleness dispatch (``repro.posttrain``): wave
+                    t may be generated with weights ``staleness`` versions
+                    old, so its decode streams run while the trainer is
+                    still on steps t-staleness .. t-1, and the trainer
+                    consumes rollouts as soon as the wave lands instead of
+                    idling through the generation phase.  staleness=0 is
+                    exactly 'sync' (same floats).
+
+    ``comm`` names the CommBackend used for BOTH the training step's
+    gradient communication (via ``simulate_minibatch``) and the weight
+    push: p2p backends push one-sided (generator-only cost) while
+    'collective' also stalls the trainer at a push barrier every step
+    (``push_blocks_trainer``) — which is why collective pipelines stay
+    barrier-bound no matter the staleness budget.
+    """
+    if scheme not in ("sync", "async"):
+        raise ValueError(f"unknown posttrain scheme {scheme!r}; "
+                         "one of ('sync', 'async')")
+    K = 0 if scheme == "sync" else max(0, int(staleness))
+    T = len(steps)
+    if T == 0:
+        return PosttrainResult(0.0, [], [], [], [])
+    D = steps[0][0].world_size
+    backend = _scheme_backend(comm)
+    layers = cfg.num_layers if gen.push_layers is None else gen.push_layers
+    push = backend.weight_push_time(cfg.comm, D, layers)
+    slots = gen.slots if gen.slots > 0 else D
+
+    slot_free = [0.0] * slots
+    gen_time: List[float] = []
+    train_start: List[float] = []
+    train_finish: List[float] = []
+    observed: List[int] = []
+    for t, (plan, lens) in enumerate(steps):
+        # the staleness bound: wave t must be generated with weights of
+        # version >= t-K, which exist once train step t-K-1 finished and
+        # one push later (version 0 = init weights, free)
+        v = max(0, t - K)
+        gate = 0.0 if v == 0 else train_finish[v - 1] + push
+        arrival = gate
+        for length in lens:
+            s = min(range(slots), key=lambda i: slot_free[i])
+            fin = max(slot_free[s], gate) + length * gen.time_per_token
+            slot_free[s] = fin
+            arrival = max(arrival, fin)
+        gen_time.append(arrival)
+        observed.append(t - v)
+
+        start = arrival if t == 0 else max(train_finish[t - 1], arrival)
+        if backend.push_blocks_trainer and t > 0:
+            # the broadcast refreshing the generator is a barrier every
+            # trainer device joins before its next step
+            start = max(start, train_finish[t - 1] + push)
+        tm = simulate_minibatch(plan, lens, scheme=comm, cfg=cfg,
+                                profile=profile, step=t).makespan
+        train_start.append(start)
+        train_finish.append(start + tm)
+    return PosttrainResult(
+        makespan=train_finish[-1],
+        gen_time=gen_time,
+        train_start=train_start,
+        train_finish=train_finish,
+        observed_staleness=observed,
+    )

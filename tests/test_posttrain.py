@@ -1,0 +1,446 @@
+"""Asynchronous post-training subsystem (repro.posttrain).
+
+Key claims:
+  * **staleness-0 golden** — the pipeline at staleness 0 replays the
+    pre-subsystem synchronous GRPO loop bit for bit (same batches, same
+    loss floats), so async dispatch is a pure superset of today's loop;
+  * **buffer invariants** — FIFO dispatch always, staleness bound
+    enforced at the dispatch point (property-tested);
+  * **weight push** — ``CommBackend.weight_push`` materializes exactly
+    the trainer's params (bitwise) on every backend, p2p chains included;
+  * **GenerationEngine** — the serve-extracted engine reproduces the
+    inline prefill/decode loop and truncates per-rollout stop lengths;
+  * **simulator** — ``simulate_posttrain``: sync == async@0, async never
+    slower, monotone in staleness, and the free-generation degenerate
+    case equals the raw per-minibatch makespans (what rl_throughput
+    routes through);
+  * **loaders** — ``grpo_batch`` seed determinism + group-mean-zero
+    advantages; ``launch.train`` save→resume bit-identity.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.balance import lb_mini, make_plan
+from repro.configs import get_reduced
+from repro.core.gspmd import GSPMDConfig, ShardingRules, make_train_step
+from repro.data import build_minibatch, grpo_batch, scale_spread
+from repro.data.packing import pack_plan_to_batches
+from repro.launch.mesh import make_host_mesh
+from repro.models import transformer as T
+from repro.optim import AdamWConfig, adamw_init
+from repro.posttrain import (
+    GenerationEngine, GRPOTask, PostTrainPipeline, Rollout, RolloutBuffer,
+    SFTTask, StalenessViolation, WeightPusher,
+)
+from repro.sim import GenModel, SimConfig, simulate_minibatch, simulate_posttrain
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ===========================================================================
+# data: grpo_batch
+# ===========================================================================
+def test_grpo_batch_seed_determinism():
+    a = grpo_batch(6, 4, 5000, max_len=256, seed=3)
+    b = grpo_batch(6, 4, 5000, max_len=256, seed=3)
+    c = grpo_batch(6, 4, 5000, max_len=256, seed=4)
+    assert all(np.array_equal(x, y) for x, y in zip(a[0], b[0]))
+    assert np.array_equal(a[1], b[1]) and np.array_equal(a[2], b[2])
+    assert not np.array_equal(a[2], c[2])
+
+
+def test_grpo_batch_group_mean_zero_advantages():
+    _, adv, _ = grpo_batch(5, 8, 5000, max_len=256, seed=0)
+    groups = adv.reshape(5, 8)
+    assert np.abs(groups.sum(axis=1)).max() < 1e-12
+
+
+def test_grpo_batch_shapes_and_length_variance():
+    toks, adv, lens = grpo_batch(4, 2, 5000, max_len=128, seed=1)
+    assert len(toks) == len(adv) == len(lens) == 8
+    assert all(len(t) == l for t, l in zip(toks, lens))
+    assert lens.max() <= 128
+    base = grpo_batch(16, 4, 5000, max_len=4096, seed=1)[2]
+    wide = grpo_batch(16, 4, 5000, max_len=4096, seed=1,
+                      length_variance=4.0)[2]
+    assert np.var(wide.astype(float)) > np.var(base.astype(float))
+    # variance 1.0 is the bit-identical default
+    same = grpo_batch(16, 4, 5000, max_len=4096, seed=1,
+                      length_variance=1.0)[2]
+    assert np.array_equal(base, same)
+
+
+def test_scale_spread_identity_and_mean():
+    lens = np.asarray([30, 40, 50, 60])
+    assert scale_spread(lens, 1.0) is lens
+    wide = scale_spread(lens, 2.0)
+    assert np.array_equal(wide, [15, 35, 55, 75])  # mean (45) preserved
+    # the min_len floor kicks in before a length can go non-positive
+    assert scale_spread(np.asarray([1, 99]), 4.0).min() >= 1
+
+
+# ===========================================================================
+# data: build_minibatch (the deduplicated assembly)
+# ===========================================================================
+def _legacy_weighted_minibatch(plan, sample_tokens, advantages, buffer_len):
+    """The pre-dedup examples/rl_grpo_aime.py::build_weighted_minibatch,
+    kept verbatim as the regression oracle."""
+    M = max(plan.max_microbatches, 1)
+    per_dev = []
+    for dev in plan.assignments:
+        mbs = list(dev) + [[] for _ in range(M - len(dev))]
+        d = pack_plan_to_batches(mbs, sample_tokens, buffer_len)
+        for m, mb in enumerate(mbs):
+            for seg, idx in enumerate(mb):
+                row = d["segment_ids"][m, 0]
+                d["loss_mask"][m, 0] = np.where(
+                    row == seg, d["loss_mask"][m, 0] * advantages[idx],
+                    d["loss_mask"][m, 0])
+        per_dev.append(d)
+    return {k: np.concatenate([d[k] for d in per_dev], axis=1)
+            for k in per_dev[0]}
+
+
+def test_build_minibatch_matches_legacy_weighted():
+    toks, adv, lens = grpo_batch(8, 4, 5000, max_len=192, seed=2)
+    plan = lb_mini([int(l) for l in lens], 8, max_tokens=256)
+    new = build_minibatch(plan, toks, 256, advantages=list(adv))
+    old = _legacy_weighted_minibatch(plan, toks, adv, 256)
+    assert set(new) == set(old)
+    for k in old:
+        assert np.array_equal(np.asarray(new[k]), old[k]), k
+
+
+def test_build_minibatch_unweighted_mask_is_binary():
+    toks, _, lens = grpo_batch(4, 2, 5000, max_len=128, seed=0)
+    plan = lb_mini([int(l) for l in lens], 8, max_tokens=256)
+    b = build_minibatch(plan, toks, 256)
+    assert set(np.unique(np.asarray(b["loss_mask"]))) <= {0.0, 1.0}
+
+
+# ===========================================================================
+# RolloutBuffer invariants
+# ===========================================================================
+def _mk(n, version, start=0):
+    return [Rollout(tokens=np.arange(start + i, start + i + 3,
+                                     dtype=np.int32),
+                    advantage=None, version=version) for i in range(n)]
+
+
+def test_buffer_fifo_order():
+    buf = RolloutBuffer(staleness=2)
+    buf.put(_mk(3, version=0, start=0), version=0)
+    buf.put(_mk(2, version=1, start=100), version=1)
+    out = buf.pop(4, train_step=1)
+    assert [r.seq for r in out] == [0, 1, 2, 3]
+    assert [r.tokens[0] for r in out] == [0, 1, 2, 100]
+
+
+def test_buffer_staleness_enforced():
+    buf = RolloutBuffer(staleness=1)
+    buf.put(_mk(2, version=0), version=0)
+    with pytest.raises(StalenessViolation):
+        buf.pop(2, train_step=2)  # 2 - 0 > 1
+    buf2 = RolloutBuffer(staleness=0)
+    buf2.put(_mk(2, version=3), version=3)
+    assert len(buf2.pop(2, train_step=3)) == 2
+    assert buf2.staleness_seen == [0, 0]
+
+
+def test_buffer_underflow_and_validation():
+    buf = RolloutBuffer()
+    with pytest.raises(ValueError, match="minibatch needs"):
+        buf.pop(1, train_step=0)
+    with pytest.raises(ValueError, match="staleness bound"):
+        RolloutBuffer(staleness=-1)
+
+
+try:  # only the @given test needs hypothesis; the rest run without it
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @settings(deadline=None, max_examples=50)
+    @given(st.integers(0, 3), st.lists(st.integers(1, 5), min_size=1,
+                                       max_size=8))
+    def test_buffer_pipeline_schedule_respects_bound(K, wave_sizes):
+        """Property: the pipeline's fill discipline (wave w generated once
+        trained >= w - K) never trips the buffer's bound, dispatch is
+        globally FIFO, and observed staleness never exceeds K."""
+        buf = RolloutBuffer(staleness=K)
+        T_steps = len(wave_sizes)
+        next_wave, trained = 0, 0
+        popped = []
+        for t in range(T_steps):
+            while next_wave < T_steps and next_wave <= trained + K:
+                buf.put(_mk(wave_sizes[next_wave], version=trained),
+                        version=trained)
+                next_wave += 1
+            out = buf.pop(wave_sizes[t], train_step=t)
+            popped.extend(r.seq for r in out)
+            trained = t + 1
+        assert popped == sorted(popped) == list(range(sum(wave_sizes)))
+        assert buf.max_staleness_seen <= K
+        if K == 0:
+            assert buf.staleness_seen == [0] * sum(wave_sizes)
+
+
+# ===========================================================================
+# the golden test: staleness-0 pipeline ≡ the synchronous GRPO loop
+# ===========================================================================
+@pytest.fixture(scope="module")
+def grpo_setup():
+    cfg = get_reduced("qwen-1.5b")
+    mesh = make_host_mesh()
+    gcfg = GSPMDConfig(rules=ShardingRules(), schedule="minibatch",
+                       comm="odc", block_kv=128)
+    step = jax.jit(make_train_step(cfg, mesh, gcfg, AdamWConfig(lr=1e-3)))
+    params = T.init_params(cfg, KEY)
+    return cfg, mesh, gcfg, step, params
+
+
+def _sync_reference_losses(cfg, mesh, step, params, iters, prompts, group):
+    """The pre-subsystem examples/rl_grpo_aime.py loop, verbatim."""
+    world = mesh.shape["data"]
+    opt = adamw_init(params)
+    losses = []
+    for it in range(iters):
+        toks, adv, lens = grpo_batch(prompts, group, cfg.vocab_size,
+                                     max_len=192, seed=it)
+        plan = lb_mini([int(l) for l in lens], world, max_tokens=256)
+        batch = build_minibatch(plan, toks, 256, advantages=list(adv))
+        with mesh:
+            params, opt, metrics = step(params, opt, batch)
+        losses.append(float(metrics["loss"]))
+    return losses
+
+
+def test_staleness0_bit_identical_to_sync_loop(grpo_setup):
+    cfg, mesh, gcfg, step, params = grpo_setup
+    iters, prompts, group = 3, 4, 2
+    ref = _sync_reference_losses(cfg, mesh, step, params, iters, prompts,
+                                 group)
+    task = GRPOTask(vocab_size=cfg.vocab_size, prompts=prompts, group=group,
+                    max_len=192, max_tokens=256)
+    pipe = PostTrainPipeline(task=task, step_fn=step, mesh=mesh,
+                             world=mesh.shape["data"], staleness=0)
+    _, _, metrics = pipe.run(iters, params, adamw_init(params),
+                             verbose=False)
+    got = [m["loss"] for m in metrics]
+    assert got == ref  # bit-exact float equality, not allclose
+    assert all(m["staleness"] == 0 for m in metrics)
+
+
+def test_staleness1_same_rollout_stream_bounded_staleness(grpo_setup):
+    cfg, mesh, gcfg, step, params = grpo_setup
+    task = GRPOTask(vocab_size=cfg.vocab_size, prompts=4, group=2,
+                    max_len=192, max_tokens=256)
+    pipe = PostTrainPipeline(task=task, step_fn=step, mesh=mesh,
+                             world=mesh.shape["data"], staleness=1)
+    _, _, metrics = pipe.run(3, params, adamw_init(params), verbose=False)
+    # synthetic rollouts don't read weights, so the sample stream — and
+    # hence the loss floats — match the synchronous loop even at K=1
+    ref = _sync_reference_losses(cfg, mesh, step, params, 3, 4, 2)
+    assert [m["loss"] for m in metrics] == ref
+    assert [m["staleness"] for m in metrics] == [0, 1, 1]
+    assert pipe.buffer.max_staleness_seen == 1
+
+
+def test_sft_task_routes_through_pipeline(grpo_setup):
+    cfg, mesh, gcfg, step, params = grpo_setup
+    world = mesh.shape["data"]
+    task = SFTTask(vocab_size=cfg.vocab_size, world=world,
+                   dataset="longalign", minibatch_per_device=2,
+                   max_tokens=128, max_len=96)
+    pipe = PostTrainPipeline(task=task, step_fn=step, mesh=mesh,
+                             world=world, staleness=0)
+    _, _, metrics = pipe.run(2, params, adamw_init(params), verbose=False)
+    assert len(metrics) == 2
+    assert all(np.isfinite(m["loss"]) for m in metrics)
+    assert metrics[0]["rollouts"] == world * 2
+
+
+# ===========================================================================
+# weight push
+# ===========================================================================
+@pytest.mark.parametrize("comm", ["collective", "odc"])
+def test_weight_push_materializes_trainer_params_bitwise(comm):
+    cfg = get_reduced("qwen-1.5b")
+    mesh = make_host_mesh()
+    gcfg = GSPMDConfig(rules=ShardingRules(), comm=comm, block_kv=128)
+    params = T.init_params(cfg, KEY)
+    pusher = WeightPusher(cfg, mesh, gcfg)
+    pushed = pusher.push(params, version=0)
+    assert pusher.version == 0 and pusher.pushes == 1
+    flat_a = jax.tree_util.tree_leaves(params)
+    flat_b = jax.tree_util.tree_leaves(pushed)
+    assert len(flat_a) == len(flat_b)
+    for a, b in zip(flat_a, flat_b):
+        assert a.shape == b.shape
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# ===========================================================================
+# GenerationEngine
+# ===========================================================================
+def test_generation_engine_matches_inline_loop():
+    from repro.core.gspmd import make_decode_step, make_prefill_step
+
+    cfg = get_reduced("qwen-1.5b")
+    mesh = make_host_mesh()
+    gcfg = GSPMDConfig(rules=ShardingRules(), block_kv=64)
+    params = T.init_params(cfg, KEY)
+    B, S, G = 8, 16, 4
+    tokens = jax.random.randint(KEY, (B, S), 1, cfg.vocab_size)
+
+    engine = GenerationEngine(cfg, mesh, gcfg)
+    res = engine.generate(params, tokens, G)
+    assert res.generated.shape == (B, G)
+
+    # the serve-style inline loop, verbatim
+    prefill = jax.jit(make_prefill_step(cfg, mesh, gcfg))
+    decode = jax.jit(make_decode_step(cfg, mesh, gcfg))
+    cache = T.init_cache(cfg, B, S + G, enc_len=0)
+    batch = {"tokens": tokens,
+             "positions": jnp.arange(S)[None].repeat(B, 0)}
+    with mesh:
+        logits, cache = prefill(params, batch, cache)
+    nxt = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+    ref = [nxt]
+    for i in range(G - 1):
+        with mesh:
+            logits, cache = decode(params, cache, nxt, jnp.int32(S + i))
+        nxt = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        ref.append(nxt)
+    ref = np.asarray(jnp.concatenate(ref, axis=1))
+    assert np.array_equal(res.generated, ref)
+
+
+def test_generation_engine_stop_lengths():
+    cfg = get_reduced("qwen-1.5b")
+    mesh = make_host_mesh()
+    gcfg = GSPMDConfig(rules=ShardingRules(), block_kv=64)
+    params = T.init_params(cfg, KEY)
+    B, S, G = 8, 8, 8
+    tokens = jax.random.randint(KEY, (B, S), 1, cfg.vocab_size)
+    stops = np.asarray([9, 10, 16, 12, 16, 11, 9, 13])
+    res = GenerationEngine(cfg, mesh, gcfg).generate(
+        params, tokens, G, stop_lengths=stops)
+    assert np.array_equal(res.lengths, stops)
+    prompts = np.asarray(tokens)
+    for b, (seq, s) in enumerate(zip(res.sequences, stops)):
+        assert len(seq) == s
+        assert np.array_equal(seq[:S], prompts[b])  # prompt prefix intact
+        assert np.array_equal(seq[S:], res.generated[b, : s - S])
+
+
+# ===========================================================================
+# simulate_posttrain
+# ===========================================================================
+def _sim_steps(n=5, seed=0, world=8):
+    from repro.data import sample_lengths
+
+    steps = []
+    for t in range(n):
+        lens = sample_lengths("aime", world * 4, seed=seed + t)
+        lens = [min(int(l), 16_384) for l in lens]
+        steps.append((make_plan(lens, world, 16_384), lens))
+    return steps
+
+
+def test_simulate_posttrain_sync_equals_staleness0():
+    steps = _sim_steps()
+    gen = GenModel(time_per_token=2e-5)
+    for comm in ("collective", "odc"):
+        a = simulate_posttrain(steps, scheme="sync", comm=comm, gen=gen)
+        b = simulate_posttrain(steps, scheme="async", staleness=0,
+                               comm=comm, gen=gen)
+        assert a.makespan == b.makespan
+        assert a.train_finish == b.train_finish
+
+
+def test_simulate_posttrain_async_never_slower_and_monotone():
+    steps = _sim_steps()
+    gen = GenModel(time_per_token=2e-5)
+    for comm in ("collective", "odc"):
+        prev = None
+        for K in (0, 1, 2, 4):
+            r = simulate_posttrain(steps, scheme="async", staleness=K,
+                                   comm=comm, gen=gen)
+            assert max(r.observed_staleness) <= K
+            if prev is not None:
+                assert r.makespan <= prev + 1e-12
+            prev = r.makespan
+
+
+def test_simulate_posttrain_free_generation_reduces_to_training():
+    steps = _sim_steps()
+    r = simulate_posttrain(steps, scheme="sync", comm="odc",
+                           gen=GenModel(time_per_token=0.0, push_layers=0))
+    total = sum(simulate_minibatch(p, l, scheme="odc").makespan
+                for p, l in steps)
+    assert abs(r.makespan - total) < 1e-12
+
+
+def test_simulate_posttrain_validates_scheme():
+    with pytest.raises(ValueError, match="unknown posttrain scheme"):
+        simulate_posttrain(_sim_steps(2), scheme="turbo")
+
+
+def test_weight_push_time_hooks():
+    from repro.core.backend import get_backend
+    from repro.sim import CommModel
+
+    cm = CommModel()
+    assert get_backend("collective").push_blocks_trainer
+    assert not get_backend("odc").push_blocks_trainer
+    for name in ("collective", "odc", "hier"):
+        b = get_backend(name)
+        assert b.weight_push_time(cm, 8, 0) == 0.0
+        assert b.weight_push_time(cm, 8, 24) == \
+            24 * b.layer_comm_time(cm, 8)
+
+
+# ===========================================================================
+# launch.train: save → resume bit-identity
+# ===========================================================================
+def test_train_save_resume_bit_identical(tmp_path):
+    from repro.launch import train as train_mod
+
+    common = ["--arch", "qwen-1.5b", "--reduced", "--strategy", "lb_mini",
+              "--schedule", "minibatch", "--comm", "odc",
+              "--minibatch-per-device", "2", "--max-tokens", "128",
+              "--max-len", "96"]
+    d_full, d_resume = str(tmp_path / "full"), str(tmp_path / "resume")
+    # uninterrupted: 3 steps, checkpoint every step
+    rc = train_mod.main(common + ["--steps", "3", "--ckpt-dir", d_full,
+                                  "--save-every", "1"])
+    assert rc == 0
+    # interrupted after 1 step, then resumed to 3
+    rc = train_mod.main(common + ["--steps", "1", "--ckpt-dir", d_resume,
+                                  "--save-every", "1"])
+    assert rc == 0
+    rc = train_mod.main(common + ["--steps", "3", "--ckpt-dir", d_resume,
+                                  "--save-every", "1", "--resume"])
+    assert rc == 0
+    a = np.load(os.path.join(d_full, "state_00000003_host0.npz"))
+    b = np.load(os.path.join(d_resume, "state_00000003_host0.npz"))
+    assert sorted(a.files) == sorted(b.files)
+    for k in a.files:
+        assert np.array_equal(a[k], b[k]), k
+
+
+def test_train_resume_without_dir_exits():
+    from repro.launch import train as train_mod
+
+    with pytest.raises(SystemExit):
+        train_mod.main(["--arch", "qwen-1.5b", "--reduced", "--steps", "0",
+                        "--resume"])
