@@ -22,7 +22,11 @@ Acceptance targets (checked by ``validate``):
     on every cell with staleness >= 1 (barrier-bound);
   * makespan is monotone non-increasing in the staleness budget.
 
-Writes ``benchmarks/BENCH_async.json``.
+Writes ``benchmarks/BENCH_async.json`` — a golden anchor of the timeline
+core: the CI ``timeline`` job asserts it regenerates byte-identical
+through the event engine's posttrain lanes (decode slots / trainer /
+push).  Heterogeneous decode slots and the overlapped push ride in
+``timeline_sweep.py``.
 """
 from __future__ import annotations
 

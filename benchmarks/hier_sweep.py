@@ -20,7 +20,10 @@ Acceptance targets (checked by ``validate``):
     lower bound of ODC's on every mesh), and makespans are monotone in
     the slowdown factor.
 
-Writes ``benchmarks/BENCH_hier.json``.
+Writes ``benchmarks/BENCH_hier.json`` — a golden anchor of the timeline
+core: the CI ``timeline`` job asserts it regenerates byte-identical
+through ``repro.sim.timeline``'s event engine.  (The *pipelined* hier
+composition this sweep cannot express lives in ``timeline_sweep.py``.)
 """
 from __future__ import annotations
 

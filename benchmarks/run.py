@@ -13,6 +13,11 @@
   async_sweep      (ours)               async rollout→train dispatch vs the
                                         synchronous loop, staleness ×
                                         length variance × comm backend
+  timeline_sweep   (ours)               timeline-composed scenarios:
+                                        pipelined hier, posttrain with
+                                        heterogeneous decode slots +
+                                        overlapped push, with trace-derived
+                                        idle attribution
   roofline         (ours)               dry-run roofline table
 
 ``python -m benchmarks.run [module ...]`` — no args runs everything.
@@ -38,6 +43,7 @@ ALL = [
     "straggler_sweep",
     "hier_sweep",
     "async_sweep",
+    "timeline_sweep",
     "roofline",
 ]
 

@@ -5,6 +5,11 @@ cannot exhibit on one host — see DESIGN.md §8.2) across
 (dataset × minibatch-size × method), methods = {Collective, ODC} ×
 {LocalSort, LB-Micro, LB-Mini}.
 
+Golden anchor of the timeline core: every cell here schedules through
+``repro.sim.timeline``, and the CI ``timeline`` job asserts this module's
+``BENCH_overlap.json`` regenerates byte-identical — any float drift in the
+event engine's closed-form contract fails the build.
+
 Validation targets (paper):
   * all methods tie at minibs=1;
   * ODC ≥ Collective everywhere, with the gap growing with minibs;

@@ -14,7 +14,10 @@ only).  skew=1.0 is the control: it must reproduce the corresponding
 ``BENCH_overlap.json`` cells exactly (same seeds, same SimConfig, and a
 homogeneous profile is bit-exact no-op in the simulator).
 
-Writes ``benchmarks/BENCH_straggler.json``.
+Writes ``benchmarks/BENCH_straggler.json`` — a golden anchor of the
+timeline core: the CI ``timeline`` job asserts it regenerates
+byte-identical through ``repro.sim.timeline``'s event engine (including
+the profile-scaled compute and per-device wire multipliers).
 """
 from __future__ import annotations
 

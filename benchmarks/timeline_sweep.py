@@ -1,0 +1,290 @@
+"""Timeline-composed scenarios the pre-refactor scheme ladder could not
+express, with trace-derived idle attribution.
+
+Two scenario families, both only possible now that scheduling policies
+are objects composable with any backend's cost model
+(``simulate_minibatch(..., policy=...)``) and every result carries its
+event timeline:
+
+**A. Pipelined hier** — overlapped hierarchical ODC: the ``hier``
+backend's two-tier comm cost (intra-node collective + inter-node
+node-level ring) scheduled under the ``pipelined`` policy (double-buffered
+prefetch), across node count × straggler skew.  Guaranteed dominance, all
+checked per cell: pipelined hier ≤ plain hier (prefetch can always fall
+back to in-line issue), ≤ odc-overlap (hier's per-layer comm lower-bounds
+flat ODC's on every mesh), hence the best of the whole grid.
+
+**B. Posttrain with a heterogeneous generator fleet + overlapped push** —
+``simulate_posttrain`` with per-slot decode speeds taken from the trainer
+``DeviceProfile`` (decode colocated with straggling trainers) and
+``GenModel.push_overlap``: the trainer→generator weight push streamed
+under rollout decode instead of gating the wave (paper §3.2's
+non-intrusive property).  Overlapped push is never slower than the
+blocking gate, and the trainer-lane idle attribution shows where the
+remaining bubble lives (rollout gates vs push barriers vs drain).
+
+Every row carries its idle attribution read off the event timeline —
+the per-device split of makespan into busy / exposed-comm / barrier /
+staleness-gate seconds that Zeppelin (arXiv 2509.21841) and WLB-LLM
+(arXiv 2503.17924) use to motivate balancing designs.
+
+Writes ``benchmarks/BENCH_timeline.json`` and a sample Chrome trace
+(``benchmarks/sample_trace.json``, git-ignored — open in
+chrome://tracing or ui.perfetto.dev).
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.balance import STRATEGIES, make_straggler_profile
+from repro.data import sample_lengths, scale_spread
+from repro.sim import (
+    CommModel,
+    GenModel,
+    SimConfig,
+    simulate_minibatch,
+    simulate_posttrain,
+)
+
+MINIBS = 4
+DEVICES_PER_NODE = 8
+NODES = (1, 2, 4)
+FACTORS = (1.0, 2.0, 4.0)
+SEEDS = 8
+MAX_TOKENS = 65_536
+PROFILE_KIND = "one_slow"
+
+# posttrain scenario (B)
+PT_WORLD = 8
+PT_WAVES = 6
+PT_MAX_TOKENS = 16_384
+PT_TIME_PER_TOKEN = 20e-6
+PT_SLOW_FACTOR = 2.0
+PT_STALENESS = (0, 2)
+
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "BENCH_timeline.json")
+SAMPLE_TRACE = os.path.join(os.path.dirname(__file__), "sample_trace.json")
+
+# (scheme, policy override): policy=None is the backend's registered
+# policy — ("hier", "pipelined") is the composed cell the old string
+# ladder forbade
+GRID = (
+    ("odc", None),
+    ("odc-overlap", None),
+    ("hier", None),
+    ("hier", "pipelined"),
+)
+
+
+def _attribution(result):
+    """Aggregate a result's per-lane idle attribution into grid-row
+    percentages of total device-time (D × makespan)."""
+    attr = result.idle_attribution
+    total = len(attr) * result.makespan if result.makespan > 0 else 1.0
+    agg = {"busy": 0.0, "comm": 0.0, "barrier": 0.0, "gate": 0.0,
+           "push": 0.0, "drain": 0.0}
+    for lane in attr.values():
+        for k in agg:
+            agg[k] += lane[k]
+    return {f"{k}_pct": 100 * v / total for k, v in agg.items()}
+
+
+def run_pipelined_hier(dataset="longalign", nodes=NODES, factors=FACTORS,
+                       seeds=SEEDS, max_tokens=MAX_TOKENS):
+    cfg = SimConfig(overlap=0.0,  # fully-exposed comm, as in the sweeps
+                    comm=CommModel(devices_per_node=DEVICES_PER_NODE))
+    rows = []
+    for n in nodes:
+        world = n * DEVICES_PER_NODE
+        for f in factors:
+            profile = make_straggler_profile(PROFILE_KIND, world,
+                                             slow_factor=f)
+            for scheme, policy in GRID:
+                mks, br, attrs = [], [], []
+                for s in range(seeds):
+                    lens = sample_lengths(dataset, world * MINIBS, s).tolist()
+                    lens = [min(l, max_tokens) for l in lens]
+                    plan = STRATEGIES["lb_mini_het"](lens, world, max_tokens,
+                                                     profile=profile)
+                    r = simulate_minibatch(plan, lens, scheme=scheme,
+                                           cfg=cfg, profile=profile,
+                                           policy=policy)
+                    mks.append(r.makespan)
+                    br.append(r.bubble_rate)
+                    attrs.append(_attribution(r))
+                row = {
+                    "scenario": "pipelined_hier", "dataset": dataset,
+                    "nodes": n, "world": world, "slowdown": f,
+                    "scheme": scheme,
+                    "policy": policy or "backend-default",
+                    "makespan_s": float(np.mean(mks)),
+                    "samples_per_s": float(np.mean(
+                        [world * MINIBS / m for m in mks])),
+                    "bubble_pct": 100 * float(np.mean(br)),
+                }
+                for k in attrs[0]:
+                    row[k] = float(np.mean([a[k] for a in attrs]))
+                rows.append(row)
+    return rows
+
+
+def _pt_steps(variance, seed):
+    steps = []
+    for t in range(PT_WAVES):
+        lens = sample_lengths("aime", PT_WORLD * MINIBS,
+                              seed=1000 * seed + t)
+        lens = [int(l) for l in np.minimum(scale_spread(lens, variance),
+                                           PT_MAX_TOKENS)]
+        steps.append((STRATEGIES["lb_mini"](lens, PT_WORLD, PT_MAX_TOKENS),
+                      lens))
+    return steps
+
+
+def run_posttrain_composed(variance=4.0, seeds=SEEDS,
+                           staleness=PT_STALENESS):
+    cfg = SimConfig(overlap=0.0)
+    profile = make_straggler_profile(PROFILE_KIND, PT_WORLD,
+                                     slow_factor=PT_SLOW_FACTOR)
+    rows = []
+    sample = None
+    for slots_label, slot_speeds, prof in (
+            ("homogeneous", (), None),
+            ("heterogeneous", tuple(profile.speeds), profile)):
+        for push_label, push_overlap in (("blocking", False),
+                                         ("overlapped", True)):
+            for K in staleness:
+                gen = GenModel(time_per_token=PT_TIME_PER_TOKEN,
+                               slot_speeds=slot_speeds,
+                               push_overlap=push_overlap)
+                mks, idle, gate_p, push_p = [], [], [], []
+                for s in range(seeds):
+                    r = simulate_posttrain(
+                        _pt_steps(variance, s), scheme="async",
+                        staleness=K, comm="odc", cfg=cfg, gen=gen,
+                        profile=prof)
+                    mks.append(r.makespan)
+                    idle.append(r.trainer_idle / r.makespan)
+                    tr = r.idle_attribution["trainer"]
+                    gate_p.append(tr["gate"] / r.makespan)
+                    push_p.append((tr["push"] + tr["drain"]) / r.makespan)
+                    assert max(r.observed_staleness) <= K
+                    if (slots_label == "heterogeneous" and push_overlap
+                            and K == max(staleness) and s == 0):
+                        sample = r  # the composed cell, for the trace dump
+                n = PT_WAVES * PT_WORLD * MINIBS
+                rows.append({
+                    "scenario": "posttrain_composed", "variance": variance,
+                    "slots": slots_label, "push": push_label,
+                    "staleness": K,
+                    "makespan_s": float(np.mean(mks)),
+                    "samples_per_s": float(np.mean([n / m for m in mks])),
+                    "trainer_idle_pct": 100 * float(np.mean(idle)),
+                    "trainer_gate_pct": 100 * float(np.mean(gate_p)),
+                    "trainer_push_drain_pct": 100 * float(np.mean(push_p)),
+                })
+    return rows, sample
+
+
+def validate(rows):
+    msgs = []
+    hier_rows = [r for r in rows if r["scenario"] == "pipelined_hier"]
+    by = {(r["nodes"], r["slowdown"], r["scheme"], r["policy"]): r
+          for r in hier_rows}
+    node_counts = sorted({r["nodes"] for r in hier_rows})
+    factors = sorted({r["slowdown"] for r in hier_rows})
+    for n in node_counts:
+        for f in factors:
+            mk = lambda sc, pol: by[(n, f, sc, pol)]["makespan_s"]
+            ph = mk("hier", "pipelined")
+            # 1. prefetch can always fall back to in-line issue
+            if ph > mk("hier", "backend-default") * (1 + 1e-9):
+                msgs.append(f"nodes={n}/x{f}: pipelined hier slower than "
+                            f"plain hier")
+            # 2. hier per-layer comm lower-bounds flat ODC's on every mesh
+            if ph > mk("odc-overlap", "backend-default") * (1 + 1e-9):
+                msgs.append(f"nodes={n}/x{f}: pipelined hier slower than "
+                            f"odc-overlap")
+            # 3. ... so the composed cell is the best of the whole grid
+            best = min(by[(n, f, sc, pol)]["makespan_s"]
+                       for sc, pol in (("odc", "backend-default"),
+                                       ("odc-overlap", "backend-default"),
+                                       ("hier", "backend-default"),
+                                       ("hier", "pipelined")))
+            if ph > best * (1 + 1e-9):
+                msgs.append(f"nodes={n}/x{f}: pipelined hier not the "
+                            f"grid's best")
+        # 4. slowing a device never speeds anything up
+        for sc, pol in (("hier", "pipelined"), ("hier", "backend-default")):
+            for lo, hi in zip(factors, factors[1:]):
+                if by[(n, hi, sc, pol)]["makespan_s"] < \
+                        by[(n, lo, sc, pol)]["makespan_s"] - 1e-9:
+                    msgs.append(f"nodes={n}/{sc}+{pol}: not monotone in "
+                                f"slowdown at x{hi}")
+    # 5. attribution closes: busy + idle categories account for all
+    #    device-time on every row (the trace is a complete explanation)
+    for r in hier_rows:
+        total = (r["busy_pct"] + r["comm_pct"] + r["barrier_pct"]
+                 + r["gate_pct"] + r["push_pct"] + r["drain_pct"])
+        if abs(total - 100.0) > 1e-6:
+            msgs.append(f"{r['nodes']}n/x{r['slowdown']}/{r['scheme']}: "
+                        f"attribution sums to {total:.4f}% != 100%")
+
+    pt = [r for r in rows if r["scenario"] == "posttrain_composed"]
+    byp = {(r["slots"], r["push"], r["staleness"]): r for r in pt}
+    klist = sorted({r["staleness"] for r in pt})
+    for slots in ("homogeneous", "heterogeneous"):
+        for K in klist:
+            # 6. streaming the push under decode never slows the pipeline
+            b = byp[(slots, "blocking", K)]["makespan_s"]
+            o = byp[(slots, "overlapped", K)]["makespan_s"]
+            if o > b * (1 + 1e-9):
+                msgs.append(f"{slots}/K={K}: overlapped push slower than "
+                            f"blocking ({o:.3f} > {b:.3f})")
+        for push in ("blocking", "overlapped"):
+            # 7. makespan monotone in the staleness budget
+            for lo, hi in zip(klist, klist[1:]):
+                if byp[(slots, push, hi)]["makespan_s"] > \
+                        byp[(slots, push, lo)]["makespan_s"] + 1e-9:
+                    msgs.append(f"{slots}/{push}: not monotone in "
+                                f"staleness at K={hi}")
+    return msgs
+
+
+def emit_json(rows, path=BENCH_JSON):
+    from benchmarks.common import write_bench_json
+    return write_bench_json(
+        path, "timeline_sweep",
+        {"devices_per_node": DEVICES_PER_NODE, "nodes": list(NODES),
+         "minibs": MINIBS, "max_tokens": MAX_TOKENS, "seeds": SEEDS,
+         "profile_kind": PROFILE_KIND, "factors": list(FACTORS),
+         "sim_overlap_fraction": 0.0,
+         "posttrain": {"world": PT_WORLD, "waves": PT_WAVES,
+                       "max_tokens": PT_MAX_TOKENS,
+                       "time_per_token": PT_TIME_PER_TOKEN,
+                       "slow_factor": PT_SLOW_FACTOR,
+                       "staleness": list(PT_STALENESS)}},
+        rows)
+
+
+def main():
+    from benchmarks.common import emit
+    hier_rows = run_pipelined_hier()
+    pt_rows, sample = run_posttrain_composed()
+    rows = hier_rows + pt_rows
+    emit(hier_rows)
+    emit(pt_rows)
+    path = emit_json(rows)
+    print(f"# wrote {path}")
+    if sample is not None:
+        from repro.sim.trace import write_trace
+        print(f"# wrote sample trace "
+              f"{write_trace(SAMPLE_TRACE, sample.timeline)}")
+    msgs = validate(rows)
+    print("# validation:", "OK" if not msgs else "; ".join(msgs))
+    return 0 if not msgs else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -14,9 +14,11 @@ side of one communication strategy:
   * the hardware realization hooks (``kernel_gather`` /
     ``kernel_scatter_accumulate`` — the one-sided remote-DMA Pallas kernels
     in ``repro.kernels``), where one exists;
-  * its simulator cost hook (``layer_comm_time``) and barrier
-    ``discipline`` (how ``repro.sim`` schedules it: per-layer lockstep,
-    independent device progress, or pipelined prefetch);
+  * its simulator cost hook (``layer_comm_time``) and scheduling
+    ``policy`` (a ``repro.sim.timeline.SchedulingPolicy`` object — how the
+    timeline engine places its events: per-layer lockstep, independent
+    device progress, or pipelined prefetch; ``discipline`` is the policy's
+    name, kept as the legacy string view);
   * the posttrain **weight push** (``weight_push`` / ``weight_push_time`` /
     ``push_blocks_trainer``): the trainer→generator parameter refresh the
     asynchronous rollout pipeline (``repro.posttrain``) issues between
@@ -62,6 +64,12 @@ import jax.numpy as jnp
 
 from repro.balance.cost import DeviceProfile
 from repro.core import odc
+from repro.sim.timeline import (
+    INDEPENDENT,
+    LOCKSTEP,
+    PIPELINED,
+    SchedulingPolicy,
+)
 
 AxisNames = Union[str, Sequence[str]]
 
@@ -80,11 +88,13 @@ class CommBackend:
     name: str = "?"
     #: legacy spellings that resolve to this backend
     aliases: tuple = ()
-    #: simulator barrier discipline when this backend is named as a scheme:
-    #: 'lockstep' (per-layer barrier over all devices, paper Eq. 1),
-    #: 'independent' (each device runs free until the minibatch end), or
-    #: 'pipelined' (independent + per-layer comm hidden under compute).
-    discipline: str = "independent"
+    #: timeline scheduling policy when this backend is named as a scheme:
+    #: LOCKSTEP (per-layer barrier over all devices, paper Eq. 1),
+    #: INDEPENDENT (each device runs free until the minibatch end), or
+    #: PIPELINED (independent + per-layer comm hidden under compute).
+    #: A policy object, so ``repro.sim`` can compose any backend's cost
+    #: model with any policy (``simulate_minibatch(..., policy=...)``).
+    policy: SchedulingPolicy = INDEPENDENT
     #: engine schedule this backend forces (None = honor the caller's knob)
     implied_schedule: Optional[str] = None
     #: whether a trainer→generator weight push stalls the TRAINER: a fused
@@ -93,6 +103,11 @@ class CommBackend:
     #: interrupting the owner's compute — paper §3.2's non-intrusive
     #: property, the whole point of the posttrain weight-push primitive).
     push_blocks_trainer: bool = False
+
+    @property
+    def discipline(self) -> str:
+        """Legacy string view of the scheduling policy."""
+        return self.policy.name
 
     # -- executable primitives (inside shard_map) ---------------------------
     def gather(self, x, axis_name: AxisNames, *,
@@ -250,7 +265,7 @@ class CollectiveBackend(CommBackend):
     """Fused XLA collectives — the FSDP baseline (paper Fig. 1)."""
 
     name = "collective"
-    discipline = "lockstep"
+    policy = LOCKSTEP
     push_blocks_trainer = True  # a fused broadcast is a global barrier
 
     def gather(self, x, axis_name, *, device_profile=None):
@@ -297,7 +312,7 @@ class OverlapODCBackend(ODCBackend):
 
     name = "odc-overlap"
     aliases = ("overlap",)  # legacy sim scheme spelling
-    discipline = "pipelined"
+    policy = PIPELINED
     implied_schedule = "overlap"
 
 

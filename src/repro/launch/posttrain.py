@@ -86,6 +86,13 @@ def main(argv=None):
                     help="microbatch token budget")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--model-axis", type=int, default=1)
+    ap.add_argument("--trace", default="",
+                    help="write a Chrome-trace JSON of the pipeline's "
+                         "wall-clock events (wave generation, weight "
+                         "pushes, train steps) in the simulator's timeline "
+                         "schema — open in chrome://tracing / "
+                         "ui.perfetto.dev next to a simulate_posttrain "
+                         "trace of the same config")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -140,12 +147,22 @@ def main(argv=None):
     pusher = None
     if not args.no_push and args.task == "grpo" and args.rollout == "engine":
         pusher = WeightPusher(cfg, mesh, gcfg)
+    rec = None
+    if args.trace:
+        from repro.sim.trace import TraceRecorder
+        rec = TraceRecorder(meta={
+            "driver": "launch.posttrain", "arch": cfg.name,
+            "task": args.task, "comm": comm.name,
+            "staleness": args.staleness, "world": world})
     pipe = PostTrainPipeline(task=task, step_fn=step, mesh=mesh, world=world,
-                             staleness=args.staleness, pusher=pusher)
+                             staleness=args.staleness, pusher=pusher,
+                             trace=rec)
 
     t0 = time.time()
     params, opt, metrics = pipe.run(args.iters, params, opt)
     dt = time.time() - t0
+    if rec is not None:
+        print(f"[posttrain] wrote trace {rec.write(args.trace)}")
     if not metrics:
         print(f"[posttrain] done: no steps run (--iters {args.iters}); "
               "setup OK")

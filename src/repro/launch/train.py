@@ -36,6 +36,7 @@ from repro.data.packing import build_minibatch  # noqa: F401 (re-export:
 from repro.launch.mesh import make_hier_mesh, make_host_mesh
 from repro.models import transformer as T
 from repro.optim import AdamWConfig, adamw_init
+from repro.sim.trace import TraceRecorder, maybe_span
 
 
 def main(argv=None):
@@ -102,6 +103,12 @@ def main(argv=None):
                     help="resume from the latest checkpoint in --ckpt-dir "
                          "(bit-identical to an uninterrupted run: the "
                          "loader replays the skipped steps' data stream)")
+    ap.add_argument("--trace", default="",
+                    help="write a Chrome-trace JSON of the run's wall-clock "
+                         "step timing (same schema as the simulator's "
+                         "timeline traces — open in chrome://tracing or "
+                         "ui.perfetto.dev, or render next to a simulated "
+                         "run of the same config)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -183,26 +190,39 @@ def main(argv=None):
                 M, W, cfg.frontend_tokens, cfg.d_model).astype(np.float32)}
         return None
 
+    rec = None
+    if args.trace:
+        rec = TraceRecorder(meta={
+            "driver": "launch.train", "arch": cfg.name,
+            "strategy": args.strategy, "schedule": args.schedule,
+            "comm": comm.name, "world": world})
+
     t_start = time.time()
     samples_done = 0
     loss = None  # no steps run yet (--steps 0 exits with a clean summary)
     for i, step_data in enumerate(loader.steps(args.steps, skip=start_step),
                                   start=start_step):
-        batch = build_minibatch(step_data["plan"], step_data["sample_tokens"],
-                                args.max_tokens, extras=extras_for(i))
+        with maybe_span(rec, "host", "compute", f"build minibatch {i}"):
+            batch = build_minibatch(step_data["plan"],
+                                    step_data["sample_tokens"],
+                                    args.max_tokens, extras=extras_for(i))
         t0 = time.time()
-        with mesh:
-            params, opt_state, metrics = step_fn(params, opt_state, batch)
-        loss = float(metrics["loss"])
+        with maybe_span(rec, "trainer", "compute", f"train step {i}"):
+            with mesh:
+                params, opt_state, metrics = step_fn(params, opt_state, batch)
+            loss = float(metrics["loss"])  # blocks on the device result
         samples_done += len(step_data["lengths"])
         print(f"[train] step {i:4d} loss={loss:.4f} "
               f"tokens={float(metrics['tokens']):.0f} "
               f"M={step_data['plan'].max_microbatches} "
               f"dt={time.time() - t0:.2f}s")
         if args.ckpt_dir and args.save_every and (i + 1) % args.save_every == 0:
-            save_checkpoint(args.ckpt_dir, i + 1,
-                            {"params": params, "opt": opt_state})
+            with maybe_span(rec, "host", "push", f"checkpoint step {i + 1}"):
+                save_checkpoint(args.ckpt_dir, i + 1,
+                                {"params": params, "opt": opt_state})
     dt = time.time() - t_start
+    if rec is not None:
+        print(f"[train] wrote trace {rec.write(args.trace)}")
     if loss is None:
         print("[train] done: no training steps run (--steps "
               f"{args.steps}); setup OK")

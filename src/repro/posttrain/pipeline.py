@@ -35,6 +35,7 @@ import time
 from typing import Any, Callable, List, Optional
 
 from repro.posttrain.buffer import RolloutBuffer
+from repro.sim.trace import maybe_span
 
 
 @dataclasses.dataclass
@@ -49,6 +50,12 @@ class PostTrainPipeline:
     pusher       optional WeightPusher; None = hand the trainer's own
                  params to the generator (synthetic rollout sources never
                  read them, so sync-loop replays skip the push traffic)
+    trace        optional ``repro.sim.trace.TraceRecorder``: every wave
+                 generation, weight push and train step is recorded as a
+                 wall-clock event in the simulator's timeline schema, so a
+                 real pipeline run renders next to its
+                 ``simulate_posttrain`` prediction in one Chrome-trace
+                 viewer (``launch.posttrain --trace out.json``)
     """
 
     task: Any
@@ -57,6 +64,7 @@ class PostTrainPipeline:
     world: int
     staleness: int = 0
     pusher: Optional[Any] = None
+    trace: Optional[Any] = None
 
     def __post_init__(self):
         self.buffer = RolloutBuffer(self.staleness)
@@ -69,7 +77,9 @@ class PostTrainPipeline:
         if self.pusher is None:
             return params, self.trained
         if self.pusher.version < self.trained:
-            self.pusher.push(params, self.trained)
+            with maybe_span(self.trace, "push", "push",
+                            f"weights v{self.trained}"):
+                self.pusher.push(params, self.trained)
         return self.pusher.params, self.pusher.version
 
     def _fill(self, params, total_iters: int):
@@ -79,7 +89,9 @@ class PostTrainPipeline:
         while (self.next_wave < total_iters
                and self.next_wave <= self.trained + self.staleness):
             gp, gv = self._gen_params(params)
-            wave = self.task.generate_wave(self.next_wave, gp, gv)
+            with maybe_span(self.trace, "generator", "decode",
+                            f"wave {self.next_wave} (weights v{gv})"):
+                wave = self.task.generate_wave(self.next_wave, gp, gv)
             self.buffer.put(wave, gv)
             self.next_wave += 1
 
@@ -99,12 +111,16 @@ class PostTrainPipeline:
             rollouts = self.buffer.pop(self.task.wave_size, train_step=t)
             plan, batch = self.task.build_batch(rollouts, self.world)
             t0 = time.time()
-            with self.mesh:
-                params, opt_state, m = self.step_fn(params, opt_state, batch)
+            with maybe_span(self.trace, "trainer", "compute",
+                            f"train step {t}"):
+                with self.mesh:
+                    params, opt_state, m = self.step_fn(params, opt_state,
+                                                        batch)
+                loss = float(m["loss"])  # block on the device result
             self.trained = t + 1
             row = {
                 "step": t,
-                "loss": float(m["loss"]),
+                "loss": loss,
                 "tokens": float(m["tokens"]),
                 "rollouts": len(rollouts),
                 "staleness": max(t - r.version for r in rollouts),

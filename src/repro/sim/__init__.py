@@ -10,3 +10,21 @@ from repro.sim.engine import (  # noqa: F401
     simulate_posttrain,
     simulate_training,
 )
+from repro.sim.timeline import (  # noqa: F401
+    EVENT_KINDS,
+    INDEPENDENT,
+    LOCKSTEP,
+    PIPELINED,
+    POLICIES,
+    Event,
+    SchedulingPolicy,
+    Timeline,
+    get_policy,
+)
+from repro.sim.trace import (  # noqa: F401
+    TraceRecorder,
+    chrome_trace,
+    maybe_span,
+    read_trace,
+    write_trace,
+)

@@ -1,5 +1,5 @@
 """Execution-timing simulator: per-layer barriers (collective) vs
-minibatch barriers (ODC).
+minibatch barriers (ODC), as thin views over the event-timeline core.
 
 This models the paper's Eq. 1 and its relaxation, which is a *runtime*
 property (device asynchrony) that a bulk-synchronous SPMD program cannot
@@ -14,6 +14,19 @@ with per-(microbatch, device, layer) compute times from the cost model and
 per-layer communication charged from the Table 2 volume model.  Devices
 with fewer microbatches under LB-Mini simply finish their sums earlier —
 the ``max_d`` moves outside, which is the whole paper in one line.
+
+Since the timeline refactor, the barrier semantics live in
+``repro.sim.timeline``: a :class:`~repro.sim.timeline.SchedulingPolicy`
+(``lockstep`` / ``independent`` / ``pipelined``) places typed events
+(``compute`` / ``comm`` / ``barrier`` / ``gate`` / ``push`` / ``decode``)
+on per-device lanes, and every ``simulate_*`` entry point here just
+prepares the per-device times, asks the policy to schedule them, and
+reads makespan / busy / finish off the timeline — float-identical to the
+retired closed forms (golden-tested; the ``BENCH_*.json`` baselines
+regenerate byte-equal).  Each result carries its :class:`Timeline`
+(``SimResult.timeline``), so any run can export a Chrome trace
+(``repro.sim.trace``) and a per-device idle attribution — where bubble
+time actually goes: exposed comm, barrier waits, staleness gates.
 
 scheme='overlap' models ``schedule='overlap'`` (double-buffered prefetch):
 layer l+1's gather runs under layer l's compute, so per (microbatch,
@@ -34,28 +47,46 @@ a bit-exact no-op, so the paper tables are unchanged; a skewed one lets
 Tables 3–6 be re-run under stragglers, where the collective-vs-ODC gap
 widens: collective pays the straggler at every (microbatch, layer) barrier
 (Eq. 1's inner max), ODC only where the straggler is the critical device.
+
+Composability: because the policy is an argument rather than a string
+branch, any backend's cost model can be scheduled under any policy —
+``simulate_minibatch(..., scheme='hier', policy='pipelined')`` is the
+overlapped hierarchical ODC the old scheme ladder could not express.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
 from repro.balance.cost import CostModel, DEFAULT_COST_MODEL, DeviceProfile
 from repro.balance.strategies import Plan
+from repro.sim.timeline import (
+    SchedulingPolicy,
+    Timeline,
+    get_policy,
+    schedule_minibatch,
+)
 
 
 def _scheme_backend(scheme: str):
     """Resolve a sim scheme name through the comm-backend registry
     ('collective' | 'odc' | 'odc-overlap' | 'hier', with 'overlap' as the
     legacy alias of 'odc-overlap').  The backend carries both the per-layer
-    comm cost hook and the barrier ``discipline`` this engine schedules
-    ('lockstep' | 'independent' | 'pipelined').  Imported lazily so the
-    simulator stays importable without touching jax-side modules first."""
+    comm cost hook and the scheduling ``policy`` this engine hands the
+    timeline ('lockstep' | 'independent' | 'pipelined').  Imported lazily
+    so the simulator stays importable without touching jax-side modules
+    first."""
     from repro.core.backend import get_backend
 
     return get_backend(scheme)
+
+
+def _resolve_policy(backend, policy) -> SchedulingPolicy:
+    """The backend's registered policy unless the caller composes another
+    one over the same cost model (e.g. pipelined 'hier')."""
+    return get_policy(policy) if policy is not None else backend.policy
 
 
 @dataclasses.dataclass(frozen=True)
@@ -110,10 +141,23 @@ class SimResult:
     device_busy: List[float]
     bubble_rate: float
     device_finish: List[float]
+    #: the event trace the makespan was read off (Chrome-trace exportable
+    #: via repro.sim.trace); excluded from equality so results still
+    #: compare by their numbers
+    timeline: Optional[Timeline] = dataclasses.field(
+        default=None, compare=False, repr=False)
 
     @property
     def throughput_scale(self) -> float:
         return 1.0 / self.makespan if self.makespan > 0 else 0.0
+
+    @property
+    def idle_attribution(self) -> Optional[Dict[str, Dict[str, float]]]:
+        """Per-device split of makespan into busy / exposed-comm /
+        barrier-wait / staleness-gate / push / drain seconds."""
+        if self.timeline is None:
+            return None
+        return self.timeline.idle_breakdown(self.makespan)
 
 
 def _microbatch_times(plan: Plan, seqlens: Sequence[int], cfg: SimConfig):
@@ -149,18 +193,47 @@ def _profile_multipliers(profile: Optional[DeviceProfile], D: int,
     return comp, comm
 
 
+def _step_times_and_wire(plan: Plan, seqlens: Sequence[int],
+                         cfg: SimConfig, backend,
+                         device_speed: Optional[Sequence[float]],
+                         profile: Optional[DeviceProfile], step: int):
+    """The single per-step cost path shared by every simulate_* entry
+    point (it used to be copy-pasted between ``simulate_minibatch`` and
+    ``simulate_training``'s staleness branch, and had drifted): per-device
+    microbatch compute seconds — scaled by ``device_speed`` and/or the
+    resolved profile's compute multipliers — plus the per-device per-layer
+    exposed wire seconds ``cl``."""
+    D = plan.world_size
+    times = _microbatch_times(plan, seqlens, cfg)
+    if device_speed is not None:
+        assert len(device_speed) == D
+        times = [[t / max(device_speed[d], 1e-9) for t in ts]
+                 for d, ts in enumerate(times)]
+    step_profile = profile if profile is not None else plan.profile
+    comp_mult, comm_mult = _profile_multipliers(step_profile, D, step)
+    if comp_mult is not None:
+        times = [[t * comp_mult[d] for t in ts]
+                 for d, ts in enumerate(times)]
+    comm_l = backend.layer_comm_time(cfg.comm, D) * (1.0 - cfg.overlap)
+    cl = ([comm_l * m for m in comm_mult] if comm_mult is not None
+          else [comm_l] * D)
+    return times, cl
+
+
 def simulate_minibatch(plan: Plan, seqlens: Sequence[int], *,
                        scheme: str, cfg: SimConfig = SimConfig(),
                        device_speed: Optional[Sequence[float]] = None,
                        profile: Optional[DeviceProfile] = None,
-                       step: int = 0) -> SimResult:
+                       step: int = 0,
+                       policy: Union[str, SchedulingPolicy, None] = None,
+                       ) -> SimResult:
     """scheme: a comm-backend registry name — 'collective' (per-layer
     barrier, Eq. 1), 'odc' (independent progress, barrier only at the
     minibatch end), 'odc-overlap' / legacy alias 'overlap' (ODC +
     double-buffered prefetch: per-layer comm charged only where it exceeds
     that layer's compute, plus one pipeline-fill charge), or 'hier'
     (hierarchical node × device: intra-node collective + inter-node
-    node-level p2p ring at full RDMA bandwidth, ODC's barrier discipline;
+    node-level p2p ring at full RDMA bandwidth, ODC's barrier policy;
     nodes are ``cfg.comm.devices_per_node`` wide).
 
     device_speed: optional per-device relative speed (1.0 = nominal,
@@ -171,13 +244,15 @@ def simulate_minibatch(plan: Plan, seqlens: Sequence[int], *,
     speed AND wire multipliers AND seeded per-step jitter; defaults to the
     profile the plan was balanced with (Plan.profile), so heterogeneous
     plans round-trip.  ``step`` seeds the jitter draw for this minibatch.
+
+    policy: override the backend's scheduling policy ('lockstep' |
+    'independent' | 'pipelined' or a SchedulingPolicy) — composes any
+    backend's cost model with any barrier discipline, e.g.
+    ``scheme='hier', policy='pipelined'`` for overlapped hierarchical ODC.
+    None (the default) uses the backend's registered policy, which is the
+    pre-refactor behavior exactly.
     """
     D = plan.world_size
-    times = _microbatch_times(plan, seqlens, cfg)
-    if device_speed is not None:
-        assert len(device_speed) == D
-        times = [[t / max(device_speed[d], 1e-9) for t in ts]
-                 for d, ts in enumerate(times)]
     if profile is None:
         profile = plan.profile
     if device_speed is not None and profile is not None:
@@ -185,53 +260,18 @@ def simulate_minibatch(plan: Plan, seqlens: Sequence[int], *,
             "both device_speed and a DeviceProfile (explicit or carried by "
             "the plan) are set — the slowdown would be applied twice; "
             "fold the speeds into the profile instead")
-    comp_mult, comm_mult = _profile_multipliers(profile, D, step)
-    if comp_mult is not None:
-        times = [[t * comp_mult[d] for t in ts]
-                 for d, ts in enumerate(times)]
-    L = cfg.num_layers
     backend = _scheme_backend(scheme)
-    comm_l = backend.layer_comm_time(cfg.comm, D) * (1.0 - cfg.overlap)
-    # per-device wire time (heterogeneous NICs / congestion jitter)
-    cl = ([comm_l * m for m in comm_mult] if comm_mult is not None
-          else [comm_l] * D)
+    pol = _resolve_policy(backend, policy)
+    times, cl = _step_times_and_wire(plan, seqlens, cfg, backend,
+                                     device_speed, profile, step)
+    L = cfg.num_layers
+
+    tl = Timeline(source="sim", meta={"model": "minibatch",
+                                      "scheme": backend.name,
+                                      "policy": pol.name})
+    makespan, finish = schedule_minibatch(tl, pol, times, cl, L)
 
     busy = [sum(ts) for ts in times]
-
-    if backend.discipline == "pipelined":
-        finish = []
-        for d, (b, ts) in enumerate(zip(busy, times)):
-            # fill: the very first prefetch (layer 0, microbatch 0) has
-            # nothing to hide under; every later gather rides the max()
-            t = cl[d] if ts else 0.0
-            for mb_t in ts:
-                t += L * max(mb_t / L, cl[d])
-            # the overlapped issue order can always degrade to in-line
-            # issue, so it is never slower than the plain ODC schedule
-            finish.append(min(t, b + L * cl[d] * len(ts)))
-        makespan = max(finish) if finish else 0.0
-    elif backend.discipline == "independent":
-        # each device runs straight through its own microbatches; the only
-        # barrier is the minibatch end (optimizer step).
-        finish = [b + L * cl[d] * len(ts)
-                  for d, (b, ts) in enumerate(zip(busy, times))]
-        makespan = max(finish) if finish else 0.0
-    else:
-        # per-layer lockstep: every (microbatch, layer) step is gated by the
-        # slowest device (compute AND wire).  Devices with fewer
-        # microbatches still wait (they participate in the collectives
-        # with empty work).
-        M = max((len(ts) for ts in times), default=0)
-        comm_gate = max(cl) if cl else 0.0
-        makespan = 0.0
-        for m in range(M):
-            per_layer = [
-                (times[d][m] / L if m < len(times[d]) else 0.0)
-                for d in range(D)
-            ]
-            makespan += L * (max(per_layer) + comm_gate)
-        finish = [makespan] * D
-
     denom = D * makespan if makespan > 0 else 1.0
     total_busy = sum(busy)
     return SimResult(
@@ -239,6 +279,7 @@ def simulate_minibatch(plan: Plan, seqlens: Sequence[int], *,
         device_busy=busy,
         bubble_rate=max(0.0, 1.0 - total_busy / denom),
         device_finish=finish,
+        timeline=tl,
     )
 
 
@@ -257,7 +298,9 @@ def samples_per_second(plan: Plan, seqlens: Sequence[int], scheme: str,
 def simulate_training(steps, *, scheme: str, cfg: SimConfig = SimConfig(),
                       staleness: int = 0,
                       device_speed: Optional[Sequence[float]] = None,
-                      profile: Optional[DeviceProfile] = None) -> float:
+                      profile: Optional[DeviceProfile] = None,
+                      policy: Union[str, SchedulingPolicy, None] = None,
+                      timeline: Optional[Timeline] = None) -> float:
     """Multi-minibatch makespan.  ``steps``: list of (plan, seqlens).
 
     scheme='collective'         per-layer barriers inside every minibatch
@@ -267,7 +310,7 @@ def simulate_training(steps, *, scheme: str, cfg: SimConfig = SimConfig(),
                                 registry name 'odc-overlap')
     scheme='hier'               hierarchical (node × device) ODC: intra-node
                                 collective, inter-node p2p ring; same
-                                barrier discipline as 'odc'
+                                barrier policy as 'odc'
     scheme='odc', staleness=K   bounded-staleness PS (paper §6.2): a device
                                 may start minibatch t as soon as the
                                 *global* barrier for minibatch t-K has
@@ -277,6 +320,9 @@ def simulate_training(steps, *, scheme: str, cfg: SimConfig = SimConfig(),
     jitter (``DeviceProfile.step_multipliers(t)``), so a run is
     reproducible end to end.  When omitted, each step falls back to its
     own plan's carried profile (consistently across both branches).
+    policy: scheduling-policy override, as in ``simulate_minibatch``.
+    timeline: optional Timeline to record the whole run's events into
+    (pass a fresh ``Timeline()`` and export it with ``repro.sim.trace``).
     Returns the total wall-clock (seconds) to finish all minibatches.
     """
     T = len(steps)
@@ -292,48 +338,36 @@ def simulate_training(steps, *, scheme: str, cfg: SimConfig = SimConfig(),
             "fold the speeds into the profile instead")
 
     backend = _scheme_backend(scheme)
-    if backend.discipline == "lockstep" or staleness <= 0:
-        total = 0.0
+    pol = _resolve_policy(backend, policy)
+    L = cfg.num_layers
+    tl = timeline if timeline is not None else Timeline(
+        source="sim", meta={"model": "training", "scheme": backend.name,
+                            "policy": pol.name, "staleness": staleness})
+
+    if pol.name == "lockstep" or staleness <= 0:
+        # fully-synchronous: a global barrier joins every device at each
+        # minibatch end, so the run is the fold of per-step makespans
+        barrier = 0.0
         for t, (plan, lens) in enumerate(steps):
-            total += simulate_minibatch(
-                plan, lens, scheme=scheme, cfg=cfg,
-                device_speed=device_speed, profile=profile,
-                step=t).makespan
-        return total
+            times, cl = _step_times_and_wire(
+                plan, lens, cfg, backend, device_speed, profile, t)
+            barrier, _ = schedule_minibatch(
+                tl, pol, times, cl, L,
+                barrier_name=f"minibatch {t} barrier")
+        return barrier
 
-    # bounded-staleness ODC: f[d] = device finish time of its current
-    # minibatch; B[t] = time the minibatch-t barrier cleared.
-    busy = []
-    for t, (plan, lens) in enumerate(steps):
-        times = _microbatch_times(plan, lens, cfg)
-        if device_speed is not None:
-            times = [[x / max(device_speed[d], 1e-9) for x in ts]
-                     for d, ts in enumerate(times)]
-        step_profile = profile if profile is not None else plan.profile
-        comp_mult, comm_mult = _profile_multipliers(step_profile, D, t)
-        if comp_mult is not None:
-            times = [[x * comp_mult[d] for x in ts]
-                     for d, ts in enumerate(times)]
-        comm_l = backend.layer_comm_time(cfg.comm, D) * (1.0 - cfg.overlap)
-        cl = ([comm_l * m for m in comm_mult] if comm_mult is not None
-              else [comm_l] * D)
-        L = cfg.num_layers
-        if backend.discipline == "pipelined":
-            busy.append([
-                min((cl[d] if ts else 0.0)
-                    + sum(L * max(x / L, cl[d]) for x in ts),
-                    sum(ts) + L * cl[d] * len(ts))
-                for d, ts in enumerate(times)])
-        else:
-            busy.append([sum(ts) + L * cl[d] * len(ts)
-                         for d, ts in enumerate(times)])
-
-    f = [0.0] * D
+    # bounded-staleness: a device may start minibatch t as soon as the
+    # global barrier for minibatch t-K cleared (its staleness gate);
+    # barrier[t] = time the minibatch-t barrier cleared.
     barrier = [0.0] * (T + 1)
-    for t in range(T):
-        gate = barrier[t - staleness + 1] if t - staleness + 1 >= 0 else 0.0
-        f = [max(f[d], gate) + busy[t][d] for d in range(D)]
-        barrier[t + 1] = max(f)
+    for t, (plan, lens) in enumerate(steps):
+        times, cl = _step_times_and_wire(
+            plan, lens, cfg, backend, device_speed, profile, t)
+        gate = barrier[t - staleness + 1] if t - staleness + 1 >= 0 else None
+        b, _ = schedule_minibatch(
+            tl, pol, times, cl, L, gate=gate,
+            gate_name=f"staleness gate (minibatch {t})", barrier_name=None)
+        barrier[t + 1] = b
     return barrier[T]
 
 
@@ -358,11 +392,27 @@ class GenModel:
     0 = free push, which — together with ``time_per_token=0`` — reduces
     the pipeline to pure training time, the paper's rollout-excluded
     measurement convention used by ``benchmarks/rl_throughput.py``).
+
+    ``slot_speeds``: per-slot relative decode speed (1.0 = nominal) for
+    heterogeneous generator fleets — mixed accelerator generations, or
+    decode slots colocated with straggling trainers (pair it with the
+    trainer's ``DeviceProfile.speeds``).  Empty = homogeneous (bit-exact
+    with the pre-refactor model).
+
+    ``push_overlap``: overlap the weight push with rollout decode (the
+    paper §3.2 non-intrusive property, streamed): a slot may start
+    decoding wave t's rollouts as soon as train step t-K-1 finished, but
+    the wave cannot *complete* before its pushed weights fully landed —
+    the push cost is paid only where it is not hidden under decode.
+    False (default) charges the push before the wave starts, the
+    pre-refactor behavior exactly.
     """
 
     time_per_token: float = 4e-5
     slots: int = 0
     push_layers: Optional[int] = None
+    slot_speeds: tuple = ()
+    push_overlap: bool = False
 
 
 @dataclasses.dataclass
@@ -372,6 +422,9 @@ class PosttrainResult:
     train_start: List[float]
     train_finish: List[float]
     observed_staleness: List[int]  # per-step (train step - weight version)
+    #: the pipeline's event trace (decode slots, trainer, push lane)
+    timeline: Optional[Timeline] = dataclasses.field(
+        default=None, compare=False, repr=False)
 
     @property
     def trainer_idle(self) -> float:
@@ -379,6 +432,12 @@ class PosttrainResult:
         busy = sum(f - s for s, f in zip(self.train_start,
                                          self.train_finish))
         return max(0.0, self.makespan - busy)
+
+    @property
+    def idle_attribution(self) -> Optional[Dict[str, Dict[str, float]]]:
+        if self.timeline is None:
+            return None
+        return self.timeline.idle_breakdown(self.makespan)
 
 
 def simulate_posttrain(steps, *, scheme: str = "async", comm: str = "odc",
@@ -406,6 +465,10 @@ def simulate_posttrain(steps, *, scheme: str = "async", comm: str = "odc",
     'collective' also stalls the trainer at a push barrier every step
     (``push_blocks_trainer``) — which is why collective pipelines stay
     barrier-bound no matter the staleness budget.
+
+    The returned result carries the full event timeline — decode slots,
+    trainer lane, push lane — so trainer idle can be attributed to
+    rollout gates vs push barriers per step (``idle_attribution``).
     """
     if scheme not in ("sync", "async"):
         raise ValueError(f"unknown posttrain scheme {scheme!r}; "
@@ -419,8 +482,18 @@ def simulate_posttrain(steps, *, scheme: str = "async", comm: str = "odc",
     layers = cfg.num_layers if gen.push_layers is None else gen.push_layers
     push = backend.weight_push_time(cfg.comm, D, layers)
     slots = gen.slots if gen.slots > 0 else D
+    if gen.slot_speeds and len(gen.slot_speeds) != slots:
+        raise ValueError(
+            f"slot_speeds has {len(gen.slot_speeds)} entries for "
+            f"{slots} decode slots")
 
-    slot_free = [0.0] * slots
+    tl = Timeline(source="sim",
+                  meta={"model": "posttrain", "scheme": scheme,
+                        "comm": backend.name, "staleness": K,
+                        "push_overlap": gen.push_overlap})
+    slot_lanes = [tl.lane(f"slot{i}") for i in range(slots)]
+    trainer = tl.lane("trainer")
+
     gen_time: List[float] = []
     train_start: List[float] = []
     train_finish: List[float] = []
@@ -430,29 +503,52 @@ def simulate_posttrain(steps, *, scheme: str = "async", comm: str = "odc",
         # version >= t-K, which exist once train step t-K-1 finished and
         # one push later (version 0 = init weights, free)
         v = max(0, t - K)
-        gate = 0.0 if v == 0 else train_finish[v - 1] + push
-        arrival = gate
+        if gen.push_overlap:
+            # streamed push: decode may start on the finished step's
+            # weights while shards land; the wave completes only once the
+            # push has (cost paid where not hidden under decode)
+            gate = 0.0 if v == 0 else train_finish[v - 1]
+            landed = 0.0 if v == 0 else train_finish[v - 1] + push
+        else:
+            gate = 0.0 if v == 0 else train_finish[v - 1] + push
+            landed = gate
+        if v > 0 and push > 0:
+            tl.lane("push").place(train_finish[v - 1], push, "push",
+                                  f"weights v{v} -> wave {t}")
+        arrival = landed
         for length in lens:
-            s = min(range(slots), key=lambda i: slot_free[i])
-            fin = max(slot_free[s], gate) + length * gen.time_per_token
-            slot_free[s] = fin
-            arrival = max(arrival, fin)
+            s = min(range(slots), key=lambda i: slot_lanes[i].t)
+            lane = slot_lanes[s]
+            lane.wait(gate, "gate", f"weights v{v} gate")
+            dur = length * gen.time_per_token
+            if gen.slot_speeds:
+                dur = dur / gen.slot_speeds[s]
+            lane.advance(dur, "decode", f"wave {t} rollout")
+            arrival = max(arrival, lane.t)
         gen_time.append(arrival)
         observed.append(t - v)
 
-        start = arrival if t == 0 else max(train_finish[t - 1], arrival)
+        trainer.wait(arrival, "gate", f"rollout wait (wave {t})")
         if backend.push_blocks_trainer and t > 0:
             # the broadcast refreshing the generator is a barrier every
             # trainer device joins before its next step
-            start = max(start, train_finish[t - 1] + push)
-        tm = simulate_minibatch(plan, lens, scheme=comm, cfg=cfg,
-                                profile=profile, step=t).makespan
+            trainer.wait(train_finish[t - 1] + push, "push",
+                         f"push barrier (step {t})")
+        start = trainer.t
+        # the step's makespan straight off the scheduling policy — same
+        # floats as simulate_minibatch, without building (and discarding)
+        # its per-device timeline; the trainer lane keeps the step opaque
+        times, cl = _step_times_and_wire(plan, lens, cfg, backend, None,
+                                         profile, t)
+        tm, _ = backend.policy.step_blocks(times, cl, cfg.num_layers)
+        trainer.advance(tm, "compute", f"train step {t}")
         train_start.append(start)
-        train_finish.append(start + tm)
+        train_finish.append(trainer.t)
     return PosttrainResult(
         makespan=train_finish[-1],
         gen_time=gen_time,
         train_start=train_start,
         train_finish=train_finish,
         observed_staleness=observed,
+        timeline=tl,
     )

@@ -1,0 +1,350 @@
+"""Discrete-event timeline core: the one scheduling engine behind every
+simulation (and the schema real step timers emit into).
+
+The paper's claim is a *scheduling* claim — Eq. 1's per-layer ``max_d``
+barrier vs ODC's per-minibatch barrier — so the simulator models time as
+typed events placed on per-device **lanes** by a scheduling **policy**:
+
+  Event kinds   ``compute`` / ``decode``   lane is doing useful work
+                ``comm``                   exposed wire time (not hidden)
+                ``barrier``                waiting on a collective /
+                                           minibatch-end barrier
+                ``gate``                   waiting on a staleness bound or
+                                           on upstream data (rollouts)
+                ``push``                   trainer→generator weight-push
+                                           traffic, or waiting on it
+
+  Policies      ``lockstep``               every (microbatch, layer) step
+                                           gated by the slowest device
+                                           (paper Eq. 1 — the collective)
+                ``independent``            each device runs free until the
+                                           minibatch-end barrier (ODC)
+                ``pipelined``              independent + per-layer comm
+                                           hidden under compute (the
+                                           double-buffered prefetch), with
+                                           fallback to in-line issue when
+                                           that would be slower
+
+Each :class:`~repro.core.backend.CommBackend` hangs one of these policy
+objects off the registry (``backend.policy``); ``repro.sim.engine``'s
+``simulate_*`` entry points are thin views that build a timeline and read
+makespan / busy / finish off it.  Because policies are objects rather than
+string branches, they compose: any backend's cost model can be scheduled
+under any policy (e.g. pipelined ``hier`` — overlapped hierarchical ODC —
+which the old string ladder could not express).
+
+Float exactness
+---------------
+Lane cursors advance with exactly the closed-form accumulation the old
+arithmetic engine used (one ``t = max(t, gate)`` per wait, one
+``t = t + total`` per scheduled block), so makespans are bit-identical to
+the previous closed forms — the four ``BENCH_*.json`` baselines regenerate
+byte-equal.  Sub-events inside a block (the per-microbatch compute/comm
+split) are laid out at derived offsets for the trace and the idle
+attribution; they never feed back into cursor arithmetic.
+
+This module is dependency-light (no jax, no numpy) so the registry in
+``repro.core.backend`` can import policies without touching device code.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+#: the closed event vocabulary (see module docstring)
+EVENT_KINDS = ("compute", "decode", "comm", "barrier", "gate", "push")
+#: kinds that count as useful work in the idle attribution
+BUSY_KINDS = ("compute", "decode")
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    """One typed interval on one lane."""
+
+    kind: str
+    start: float
+    duration: float
+    name: str = ""
+
+    @property
+    def end(self) -> float:
+        return self.start + self.duration
+
+
+class Lane:
+    """One device / decode slot / actor: a cursor plus its event record.
+
+    ``t`` is the float-exact scheduling cursor (all makespan arithmetic);
+    events are the presentational record.  Event *starts* are clamped to
+    stay monotone per lane (derived sub-event offsets can drift from the
+    cursor by ulps), durations are stored exactly as given so per-kind
+    sums — busy conservation, idle attribution — stay exact.
+    """
+
+    def __init__(self, name: str):
+        self.name = name
+        self.t = 0.0
+        self.events: List[Event] = []
+        self._edge = 0.0  # last event start, for monotone placement
+
+    def _emit(self, start: float, duration: float, kind: str, name: str):
+        if duration <= 0.0:
+            return  # zero/negative (ulp-artifact) intervals carry no info
+        if kind not in EVENT_KINDS:
+            raise ValueError(f"unknown event kind {kind!r}; "
+                             f"one of {EVENT_KINDS}")
+        start = max(start, self._edge)
+        self._edge = start
+        self.events.append(Event(kind, start, duration, name))
+
+    def wait(self, until: float, kind: str = "barrier", name: str = ""):
+        """Advance the cursor to ``max(t, until)``, recording the gap."""
+        if until > self.t:
+            self._emit(self.t, until - self.t, kind, name)
+            self.t = until
+
+    def advance(self, duration: float, kind: str, name: str = ""):
+        """One event of ``duration`` at the cursor; cursor += duration."""
+        self._emit(self.t, duration, kind, name)
+        self.t = self.t + duration
+
+    def block(self, total: float,
+              segments: Sequence[Tuple[str, float, str]]):
+        """A scheduled block: the cursor advances by ``total`` in ONE
+        addition (the closed-form float contract); ``segments`` —
+        ``(kind, duration, name)`` triples — are laid inside the block at
+        derived offsets for the trace and the attribution sums."""
+        s = self.t
+        self.t = self.t + total
+        for kind, dur, name in segments:
+            self._emit(s, dur, kind, name)
+            s = s + dur
+
+    def place(self, start: float, duration: float, kind: str,
+              name: str = ""):
+        """Absolute placement (annotation lanes, real-run recorders);
+        bumps the cursor to the event end so makespans stay meaningful."""
+        self._emit(start, duration, kind, name)
+        self.t = max(self.t, start + duration)
+
+    def kind_totals(self) -> Dict[str, float]:
+        out = {k: 0.0 for k in EVENT_KINDS}
+        for ev in self.events:
+            out[ev.kind] += ev.duration
+        return out
+
+
+class Timeline:
+    """An ordered set of lanes plus run-level metadata.
+
+    ``source`` is "sim" for simulated runs and "real" for wall-clock
+    recordings (``repro.sim.trace.TraceRecorder``) — both serialize to the
+    same Chrome-trace schema, so they render in one viewer.
+    """
+
+    def __init__(self, source: str = "sim", meta: Optional[dict] = None):
+        self.source = source
+        self.meta = dict(meta or {})
+        self._lanes: Dict[str, Lane] = {}
+
+    def lane(self, name: str) -> Lane:
+        ln = self._lanes.get(name)
+        if ln is None:
+            ln = self._lanes[name] = Lane(name)
+        return ln
+
+    @property
+    def lanes(self) -> List[Lane]:
+        return list(self._lanes.values())
+
+    @property
+    def makespan(self) -> float:
+        return max((ln.t for ln in self._lanes.values()), default=0.0)
+
+    def idle_breakdown(self, makespan: Optional[float] = None
+                       ) -> Dict[str, Dict[str, float]]:
+        """Per-lane attribution of the full run: busy (compute+decode)
+        plus where every idle second went — exposed comm, barrier waits,
+        staleness/data gates, push traffic, and ``drain`` (done early,
+        waiting for the run to end)."""
+        mk = self.makespan if makespan is None else makespan
+        out = {}
+        for ln in self.lanes:
+            tot = ln.kind_totals()
+            out[ln.name] = {
+                "busy": sum(tot[k] for k in BUSY_KINDS),
+                "comm": tot["comm"],
+                "barrier": tot["barrier"],
+                "gate": tot["gate"],
+                "push": tot["push"],
+                "drain": max(0.0, mk - ln.t),
+            }
+        return out
+
+
+# ===========================================================================
+# scheduling policies (hung off the CommBackend registry)
+# ===========================================================================
+class SchedulingPolicy:
+    """Places one minibatch's per-device work on a timeline.
+
+    ``step_blocks`` is the whole contract: given per-device microbatch
+    compute times, per-device per-layer wire times and the layer count, it
+    returns ``(step_makespan, blocks)`` where ``blocks[d] = (duration,
+    segments)`` is device ``d``'s scheduled block for the step, with the
+    duration computed by the policy's closed-form accumulation (the float
+    contract) and the segments decomposing it for trace/attribution.
+    """
+
+    name: str = "?"
+
+    def step_blocks(self, times: Sequence[Sequence[float]],
+                    cl: Sequence[float], L: int):
+        raise NotImplementedError
+
+    def __repr__(self):
+        return f"<SchedulingPolicy {self.name!r}>"
+
+
+class IndependentPolicy(SchedulingPolicy):
+    """ODC: each device runs straight through its own microbatches; the
+    only barrier is the minibatch end (optimizer step).  Wire time is
+    charged in-line after the compute (serialized, so the aggregate
+    placement is timing-equivalent and float-exact)."""
+
+    name = "independent"
+
+    def step_blocks(self, times, cl, L):
+        blocks = []
+        for d, ts in enumerate(times):
+            b = sum(ts)
+            comm = L * cl[d] * len(ts)
+            total = b + comm
+            segs = [("compute", t, f"mb{m}") for m, t in enumerate(ts)]
+            segs.append(("comm", comm, "odc wire"))
+            blocks.append((total, segs))
+        mk = max((t for t, _ in blocks), default=0.0)
+        return mk, blocks
+
+
+class PipelinedPolicy(SchedulingPolicy):
+    """Independent progress + double-buffered prefetch: layer l+1's gather
+    runs under layer l's compute, so per (microbatch, layer) the device
+    pays max(compute, comm) instead of compute + comm, plus one
+    pipeline-fill comm charge for the first prefetch.  The overlapped
+    issue order can always degrade to in-line issue, so a device whose
+    fill charge would lose falls back to the independent schedule."""
+
+    name = "pipelined"
+
+    def step_blocks(self, times, cl, L):
+        blocks = []
+        for d, ts in enumerate(times):
+            b = sum(ts)
+            # fill: the very first prefetch (layer 0, microbatch 0) has
+            # nothing to hide under; every later gather rides the max()
+            t = cl[d] if ts else 0.0
+            slots = []
+            for mb_t in ts:
+                slot = L * max(mb_t / L, cl[d])
+                t = t + slot
+                slots.append((mb_t, slot))
+            inline = b + L * cl[d] * len(ts)
+            if t <= inline:
+                total = t
+                segs = [("comm", cl[d] if ts else 0.0, "prefetch fill")]
+                for m, (mb_t, slot) in enumerate(slots):
+                    segs.append(("compute", mb_t, f"mb{m}"))
+                    segs.append(("comm", slot - mb_t, "exposed prefetch"))
+            else:  # in-line fallback (identical to IndependentPolicy)
+                total = inline
+                segs = [("compute", mb_t, f"mb{m}")
+                        for m, mb_t in enumerate(ts)]
+                segs.append(("comm", L * cl[d] * len(ts), "odc wire"))
+            blocks.append((total, segs))
+        mk = max((t for t, _ in blocks), default=0.0)
+        return mk, blocks
+
+
+class LockstepPolicy(SchedulingPolicy):
+    """Per-layer lockstep (paper Eq. 1): every (microbatch, layer) step is
+    gated by the slowest device (compute AND wire).  Devices with fewer
+    microbatches still wait — they participate in the collectives with
+    empty work — so every device's block spans the whole step."""
+
+    name = "lockstep"
+
+    def step_blocks(self, times, cl, L):
+        D = len(times)
+        M = max((len(ts) for ts in times), default=0)
+        comm_gate = max(cl) if cl else 0.0
+        makespan = 0.0
+        segs: List[list] = [[] for _ in range(D)]
+        for m in range(M):
+            per_layer = [
+                (times[d][m] / L if m < len(times[d]) else 0.0)
+                for d in range(D)
+            ]
+            width = L * (max(per_layer) + comm_gate)
+            makespan = makespan + width
+            wire = L * comm_gate
+            for d in range(D):
+                c = times[d][m] if m < len(times[d]) else 0.0
+                segs[d].append(("compute", c, f"mb{m}"))
+                segs[d].append(("comm", wire, f"collective mb{m}"))
+                segs[d].append(("barrier", width - c - wire,
+                                f"layer barrier mb{m}"))
+        return makespan, [(makespan, s) for s in segs]
+
+
+LOCKSTEP = LockstepPolicy()
+INDEPENDENT = IndependentPolicy()
+PIPELINED = PipelinedPolicy()
+
+POLICIES: Dict[str, SchedulingPolicy] = {
+    p.name: p for p in (LOCKSTEP, INDEPENDENT, PIPELINED)
+}
+
+
+def get_policy(policy: Union[str, SchedulingPolicy]) -> SchedulingPolicy:
+    """Resolve a policy by name; an already-resolved policy passes
+    through unchanged."""
+    if isinstance(policy, SchedulingPolicy):
+        return policy
+    try:
+        return POLICIES[policy]
+    except KeyError:
+        raise ValueError(f"unknown scheduling policy {policy!r}; "
+                         f"one of {tuple(POLICIES)}") from None
+
+
+def schedule_minibatch(tl: Timeline, policy: SchedulingPolicy,
+                       times: Sequence[Sequence[float]],
+                       cl: Sequence[float], L: int, *,
+                       lane_prefix: str = "dev",
+                       gate: Optional[float] = None,
+                       gate_name: str = "staleness gate",
+                       barrier_name: Optional[str] = "minibatch barrier"):
+    """Place one minibatch on ``tl``'s device lanes under ``policy``.
+
+    ``gate``: bounded-staleness start gate (each lane first waits for it);
+    ``barrier_name``: when not None, all lanes are joined at the step's
+    barrier afterwards (the minibatch-end optimizer barrier).
+
+    Returns ``(barrier, finish)``: the step's barrier time (max lane
+    cursor after the blocks) and each device's pre-barrier finish time —
+    bit-identical to the retired closed forms.
+    """
+    _, blocks = policy.step_blocks(times, cl, L)
+    finish = []
+    lanes = [tl.lane(f"{lane_prefix}{d}") for d in range(len(blocks))]
+    for lane, (total, segs) in zip(lanes, blocks):
+        if gate is not None:
+            lane.wait(gate, "gate", gate_name)
+        lane.block(total, segs)
+        finish.append(lane.t)
+    barrier = max(finish) if finish else 0.0
+    if barrier_name is not None:
+        for lane in lanes:
+            lane.wait(barrier, "barrier", barrier_name)
+    return barrier, finish
