@@ -813,6 +813,36 @@ def make_decode_step(cfg: ModelConfig, mesh: Mesh, gcfg: GSPMDConfig,
     return decode
 
 
+def make_continuous_decode_step(cfg: ModelConfig, mesh: Mesh,
+                                gcfg: GSPMDConfig, *,
+                                shard_seq: bool = False):
+    """decode(params, cache, tokens, index) -> (logits, cache).  tokens:
+    (B, 1); index: (B,) int32 vector — slot b's new token is written at
+    ``index[b]``, so the batch rows decode at unrelated positions
+    (continuous batching).  With a uniform index vector this computes
+    exactly what ``make_decode_step`` computes (bit-identical on the host
+    backend; property-tested in tests/test_continuous_batching.py)."""
+    from repro.models import layers as L
+
+    sharder = _serve_act_sharder(cfg, mesh, gcfg.rules, shard_seq=shard_seq)
+
+    def decode(params, cache, tokens, index):
+        index = index.astype(jnp.int32)
+        batch = {"tokens": tokens, "positions": index[:, None]}
+        L.set_activation_sharder(sharder)
+        try:
+            logits, _, new_cache = T.apply(
+                cfg, params, batch, caches=cache, cache_index=index,
+                remat=False, block_kv=gcfg.block_kv,
+                moe_groups=gcfg.moe_groups, last_only=True,
+            )
+        finally:
+            L.set_activation_sharder(None)
+        return logits, new_cache
+
+    return decode
+
+
 def build_serve_artifacts(cfg: ModelConfig, mesh: Mesh, gcfg: GSPMDConfig,
                           *, kind: str, batch: int, seq_len: int,
                           cache_dtype=jnp.float32):

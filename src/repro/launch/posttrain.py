@@ -9,7 +9,9 @@ staleness) → LB-Mini balancer → FSDP±ODC trainer → p2p weight push.
 on last-pushed weights.  ``--rollout engine`` generates rollouts with a
 real prefill/decode ``GenerationEngine`` under the pushed weights
 (``synthetic`` uses the paper's seeded sampler and skips generation
-cost, matching its measurement convention).
+cost, matching its measurement convention); ``--rollout continuous``
+streams the same rollouts through the in-flight batching engine with
+live versioned weight pushes landing between decode steps.
 
 Examples (CPU, reduced config):
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
@@ -34,7 +36,8 @@ from repro.launch.mesh import make_hier_mesh, make_host_mesh
 from repro.models import transformer as T
 from repro.optim import AdamWConfig, adamw_init
 from repro.posttrain import (
-    GenerationEngine, GRPOTask, PostTrainPipeline, SFTTask, WeightPusher,
+    ContinuousGenerationEngine, GenerationEngine, GRPOTask,
+    PostTrainPipeline, SFTTask, WeightPusher,
 )
 
 
@@ -64,9 +67,15 @@ def main(argv=None):
                     help="with --comm hier: node count of the two-tier "
                          "FSDP mesh")
     ap.add_argument("--rollout", default="synthetic",
-                    choices=("synthetic", "engine"),
+                    choices=("synthetic", "engine", "continuous"),
                     help="grpo only: 'engine' decodes real rollouts with "
-                         "a GenerationEngine under the pushed weights")
+                         "a GenerationEngine under the pushed weights; "
+                         "'continuous' streams them through a "
+                         "ContinuousGenerationEngine with live versioned "
+                         "weight pushes between decode steps")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="--rollout continuous: decode lanes of the "
+                         "in-flight batching engine")
     ap.add_argument("--no-push", action="store_true",
                     help="skip the weight push (synthetic rollouts never "
                          "read generator params)")
@@ -123,10 +132,22 @@ def main(argv=None):
     # match the synchronous driver on attention-free / windowed archs
     cm = CostModel(attention_free=cfg.is_attention_free,
                    window=cfg.sliding_window)
+    rec = None
+    if args.trace:
+        from repro.sim.trace import TraceRecorder
+        rec = TraceRecorder(meta={
+            "driver": "launch.posttrain", "arch": cfg.name,
+            "task": args.task, "comm": comm.name,
+            "staleness": args.staleness, "world": world})
+
     if args.task == "grpo":
         engine = None
         if args.rollout == "engine":
             engine = GenerationEngine(cfg, mesh, gcfg)
+        elif args.rollout == "continuous":
+            engine = ContinuousGenerationEngine(
+                cfg, mesh, gcfg, slots=args.slots,
+                max_len=args.rollout_max_len, trace=rec)
         task = GRPOTask(
             vocab_size=cfg.vocab_size, prompts=args.prompts,
             group=args.group, max_len=args.rollout_max_len,
@@ -145,18 +166,14 @@ def main(argv=None):
     # GRPO and the SFT loader are version-independent, so a push every
     # step would be pure wasted gather traffic
     pusher = None
-    if not args.no_push and args.task == "grpo" and args.rollout == "engine":
+    if (not args.no_push and args.task == "grpo"
+            and args.rollout in ("engine", "continuous")):
         pusher = WeightPusher(cfg, mesh, gcfg)
-    rec = None
-    if args.trace:
-        from repro.sim.trace import TraceRecorder
-        rec = TraceRecorder(meta={
-            "driver": "launch.posttrain", "arch": cfg.name,
-            "task": args.task, "comm": comm.name,
-            "staleness": args.staleness, "world": world})
+    live = (engine if args.task == "grpo" and args.rollout == "continuous"
+            and pusher is not None else None)
     pipe = PostTrainPipeline(task=task, step_fn=step, mesh=mesh, world=world,
                              staleness=args.staleness, pusher=pusher,
-                             trace=rec)
+                             trace=rec, live_engine=live)
 
     t0 = time.time()
     params, opt, metrics = pipe.run(args.iters, params, opt)

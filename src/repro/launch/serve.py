@@ -1,14 +1,27 @@
-"""Batched serving driver: prefill a request batch, then decode greedily.
+"""Serving driver: wave-at-a-time or continuous (in-flight) batching.
 
-A thin CLI over ``repro.posttrain.GenerationEngine`` — the same
-prefill/decode path (GSPMD sharding rules shared with training, KV cache
-over batch/model) that the asynchronous post-training pipeline's rollout
-workers use; this driver is the fixed-length serving face of it.
+A thin CLI over ``repro.posttrain``'s engines — the same prefill/decode
+path (GSPMD sharding rules shared with training, KV cache over
+batch/model) that the asynchronous post-training pipeline's rollout
+workers use.
 
-Example (CPU, reduced config):
+Default mode prefills one fixed request batch and decodes it in lockstep
+(``GenerationEngine``).  ``--continuous`` routes the same requests
+through the ``ContinuousGenerationEngine`` instead: a request queue
+feeds ``--slots`` decode lanes through the block allocator, short
+requests retire early (``--length-spread`` carves per-request lengths),
+and freed slots admit queued requests mid-decode.  ``--trace`` writes
+the engine's per-slot scheduled timeline (decode events per slot, push
+lane) as a Chrome trace — the artifact the CI serve job uploads.
+
+Examples (CPU, reduced config):
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
   PYTHONPATH=src python -m repro.launch.serve --arch gemma2-9b --reduced \
       --batch 8 --prompt-len 64 --gen 32
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen-1.5b --reduced \
+      --continuous --slots 4 --requests 12 --length-spread 4 \
+      --trace serve_trace.json
 """
 from __future__ import annotations
 
@@ -16,12 +29,55 @@ import argparse
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config, get_reduced
 from repro.core.gspmd import GSPMDConfig, ShardingRules
 from repro.launch.mesh import make_host_mesh
 from repro.models import transformer as T
-from repro.posttrain.engine import GenerationEngine
+from repro.posttrain.engine import ContinuousGenerationEngine, GenerationEngine
+
+
+def _request_lengths(n: int, gen: int, spread: float, seed: int):
+    """Per-request generated-token counts in [gen/spread, gen], seeded —
+    the mixed-length stream continuous batching exists for."""
+    rng = np.random.RandomState(seed)
+    lo = max(1, int(round(gen / max(spread, 1.0))))
+    return rng.randint(lo, gen + 1, size=n)
+
+
+def _serve_continuous(cfg, mesh, gcfg, params, args, key):
+    S, G = args.prompt_len, args.gen
+    rec = None
+    if args.trace:
+        from repro.sim.trace import TraceRecorder
+        rec = TraceRecorder(meta={"driver": "launch.serve", "arch": cfg.name,
+                                  "mode": "continuous", "slots": args.slots,
+                                  "clock": "scheduled"})
+    engine = ContinuousGenerationEngine(
+        cfg, mesh, gcfg, slots=args.slots, max_len=S + G,
+        block_size=args.block_size, trace=rec)
+    engine.publish(params, 0)
+    lens = _request_lengths(args.requests, G, args.length_spread, args.seed)
+    tokens = jax.random.randint(key, (args.requests, S), 1, cfg.vocab_size)
+    for b in range(args.requests):
+        engine.submit(np.asarray(tokens[b]), int(lens[b]))
+    done = engine.run()
+    total = int(sum(len(c.generated) for c in done))
+    print(f"[serve] continuous: {len(done)} requests "
+          f"({total} generated tokens) over {args.slots} slots in "
+          f"{engine.steps} decode steps")
+    print(f"[serve] kv blocks: {engine.allocator.num_blocks} x "
+          f"{engine.allocator.block_size} positions, all freed: "
+          f"{engine.allocator.free_blocks == engine.allocator.num_blocks}")
+    by_rid = {c.rid: c for c in done}
+    first = by_rid[0]
+    print(f"[serve] req 0: {len(first.generated)} tokens "
+          f"(weights v{first.weight_version}, {first.finish_reason}) "
+          f"ids: {first.generated[:16].tolist()}")
+    if rec is not None:
+        print(f"[serve] wrote per-slot trace {rec.write(args.trace)}")
+    return 0
 
 
 def main(argv=None):
@@ -34,16 +90,37 @@ def main(argv=None):
     ap.add_argument("--data-axis", type=int, default=0)
     ap.add_argument("--model-axis", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--continuous", action="store_true",
+                    help="in-flight batching: a request queue over --slots "
+                         "decode lanes with block-allocated KV; short "
+                         "requests retire early and queued ones join "
+                         "mid-decode")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="continuous: decode lanes (the decode batch width)")
+    ap.add_argument("--requests", type=int, default=12,
+                    help="continuous: queued request count")
+    ap.add_argument("--length-spread", type=float, default=4.0,
+                    help="continuous: max/min generated-length ratio of the "
+                         "request stream")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="continuous: KV-block granularity (positions)")
+    ap.add_argument("--trace", default="",
+                    help="continuous: write the per-slot scheduled timeline "
+                         "as a Chrome trace JSON")
     args = ap.parse_args(argv)
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     mesh = make_host_mesh(data=args.data_axis, model=args.model_axis)
     gcfg = GSPMDConfig(rules=ShardingRules(), block_kv=256)
-    print(f"[serve] {cfg.name} mesh={dict(mesh.shape)} "
-          f"batch={args.batch} prompt={args.prompt_len} gen={args.gen}")
+    mode = "continuous" if args.continuous else "wave"
+    print(f"[serve] {cfg.name} mesh={dict(mesh.shape)} mode={mode} "
+          f"prompt={args.prompt_len} gen={args.gen}")
 
     key = jax.random.PRNGKey(args.seed)
     params = T.init_params(cfg, key)
+    if args.continuous:
+        return _serve_continuous(cfg, mesh, gcfg, params, args, key)
+
     B, S = args.batch, args.prompt_len
     tokens = jax.random.randint(key, (B, S), 1, cfg.vocab_size)
     extras = {}

@@ -324,15 +324,33 @@ def attn_apply(
     causal = causal and cross_kv is None
     if cache is not None:
         # decode: write new kv into the cache, attend over the whole cache
-        idx = cache_index  # (B,) or scalar
-        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), idx, axis=1)
-        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), idx, axis=1)
+        idx = cache_index  # scalar (wave decode) or (B,) vector (continuous)
+        T = cache["k"].shape[1]
+        if getattr(idx, "ndim", 0) == 1:
+            # per-row write index (continuous batching): each slot decodes
+            # at its own position, so the write is a one-hot select per row
+            # and the validity mask is per-row too.  Rows beyond a slot's
+            # cursor hold stale kv from a retired request; the mask zeroes
+            # their attention weight exactly (blockwise softmax underflows
+            # the -1e9 positions to 0.0), so stale contents are inert.
+            if S != 1:
+                raise ValueError(
+                    f"vector cache_index requires single-token decode, "
+                    f"got S={S}")
+            hot = (jnp.arange(T)[None, :] == idx[:, None])[:, :, None, None]
+            k_cache = jnp.where(hot, k.astype(cache["k"].dtype), cache["k"])
+            v_cache = jnp.where(hot, v.astype(cache["v"].dtype), cache["v"])
+            kv_positions = jnp.arange(T)[None, :].repeat(B, 0)
+            kv_positions = jnp.where(kv_positions <= idx[:, None],
+                                     kv_positions, -(10 ** 9))
+        else:
+            k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), idx, axis=1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), idx, axis=1)
+            kv_positions = jnp.arange(T)[None, :].repeat(B, 0)
+            # positions beyond the write index are invalid
+            kv_positions = jnp.where(kv_positions[0] <= idx + S - 1, kv_positions, -(10 ** 9))
         cache = {"k": k_cache, "v": v_cache}
-        T = k_cache.shape[1]
         k, v = k_cache, v_cache
-        kv_positions = jnp.arange(T)[None, :].repeat(B, 0)
-        # positions beyond the write index are invalid
-        kv_positions = jnp.where(kv_positions[0] <= idx + S - 1, kv_positions, -(10 ** 9))
         kv_segment_ids = None
 
     if window is None:

@@ -7,22 +7,36 @@ the trainer as soon as enough rollouts land, and an ODC weight push
 refreshes generator-side parameter shards p2p — no global barrier.
 
     engine.GenerationEngine    batched prefill/decode (shared with serve)
+    engine.ContinuousGenerationEngine
+                               in-flight batching: block-allocated KV,
+                               per-step admission, live versioned weights
+    engine.BlockAllocator      paged-KV admission control (invariant-tested)
     buffer.RolloutBuffer       FIFO + staleness-bound dispatch queue
     weight_push.make_weight_push / WeightPusher
-                               CommBackend.weight_push, jitted per config
+                               CommBackend.weight_push, jitted per config;
+                               ``push_live`` refreshes a running engine
     tasks.GRPOTask / SFTTask   workload adapters
     pipeline.PostTrainPipeline the orchestration loop
 
-Timing is modeled by ``repro.sim.simulate_posttrain`` (scheme='sync' vs
-'async'); ``benchmarks/async_sweep.py`` sweeps staleness × rollout-length
-variance × comm backend.
+Timing is modeled by ``repro.sim.simulate_posttrain`` (scheme='sync' /
+'async' / 'continuous'); ``benchmarks/async_sweep.py`` sweeps staleness ×
+rollout-length variance × comm backend, ``benchmarks/serve_sweep.py``
+sweeps wave-vs-continuous serving × length spread × arrivals × backend.
 """
 from repro.posttrain.buffer import (  # noqa: F401
     Rollout,
     RolloutBuffer,
     StalenessViolation,
 )
-from repro.posttrain.engine import GenerationEngine, GenerationResult  # noqa: F401
+from repro.posttrain.engine import (  # noqa: F401
+    BlockAllocator,
+    BlockAllocatorError,
+    CompletedRequest,
+    ContinuousGenerationEngine,
+    GenerationEngine,
+    GenerationResult,
+    Request,
+)
 from repro.posttrain.pipeline import PostTrainPipeline  # noqa: F401
 from repro.posttrain.tasks import GRPOTask, SFTTask  # noqa: F401
 from repro.posttrain.weight_push import WeightPusher, make_weight_push  # noqa: F401

@@ -56,6 +56,13 @@ class PostTrainPipeline:
                  real pipeline run renders next to its
                  ``simulate_posttrain`` prediction in one Chrome-trace
                  viewer (``launch.posttrain --trace out.json``)
+    live_engine  optional ``ContinuousGenerationEngine``: weight pushes go
+                 through ``pusher.push_live`` INTO the running engine —
+                 versioned publish between decode steps, barrier semantics
+                 from the backend's ``push_blocks_trainer`` — instead of
+                 swapping a params handle between waves.  The engine
+                 records its own push/stall events (scheduled clock), so
+                 the pipeline's wall-clock push span is skipped.
     """
 
     task: Any
@@ -65,6 +72,7 @@ class PostTrainPipeline:
     staleness: int = 0
     pusher: Optional[Any] = None
     trace: Optional[Any] = None
+    live_engine: Optional[Any] = None
 
     def __post_init__(self):
         self.buffer = RolloutBuffer(self.staleness)
@@ -77,9 +85,15 @@ class PostTrainPipeline:
         if self.pusher is None:
             return params, self.trained
         if self.pusher.version < self.trained:
-            with maybe_span(self.trace, "push", "push",
-                            f"weights v{self.trained}"):
-                self.pusher.push(params, self.trained)
+            if self.live_engine is not None:
+                # push lands inside the running engine (versioned publish
+                # between decode steps); the engine traces it itself
+                self.pusher.push_live(self.live_engine, params,
+                                      self.trained)
+            else:
+                with maybe_span(self.trace, "push", "push",
+                                f"weights v{self.trained}"):
+                    self.pusher.push(params, self.trained)
         return self.pusher.params, self.pusher.version
 
     def _fill(self, params, total_iters: int):

@@ -46,6 +46,13 @@ class GRPOTask:
         weights, and per-rollout stop lengths carve the variable-length
         wave.  Rewards stay synthetic (seeded) — the paper has no reward
         model either.
+    rollout_source='continuous'  the same wave through a
+        ``ContinuousGenerationEngine``: requests stream through decode
+        slots instead of padding to the wave's longest rollout, so short
+        rollouts retire early and free their KV blocks for queued ones.
+        Greedy decode is bit-identical to 'engine' per request (the
+        continuous engine's core invariant), so the sample stream — and
+        therefore training — is unchanged; only the schedule differs.
     """
 
     vocab_size: int
@@ -63,12 +70,15 @@ class GRPOTask:
     profile: Optional[DeviceProfile] = None
 
     def __post_init__(self):
-        if self.rollout_source not in ("synthetic", "engine"):
+        if self.rollout_source not in ("synthetic", "engine", "continuous"):
             raise ValueError(f"unknown rollout_source "
                              f"{self.rollout_source!r}")
         if self.rollout_source == "engine" and self.engine is None:
             raise ValueError("rollout_source='engine' needs a "
                              "GenerationEngine")
+        if self.rollout_source == "continuous" and self.engine is None:
+            raise ValueError("rollout_source='continuous' needs a "
+                             "ContinuousGenerationEngine")
         if self.max_len > self.max_tokens:
             raise ValueError(
                 f"rollout max_len ({self.max_len}) exceeds the microbatch "
@@ -89,7 +99,9 @@ class GRPOTask:
                     for t, a in zip(toks, adv)]
         return self._engine_wave(it, params, version)
 
-    def _engine_wave(self, it: int, params, version: int) -> List[Rollout]:
+    def _wave_inputs(self, it: int):
+        """The seeded (prompts, stop lengths, advantages) of wave ``it`` —
+        shared by both engine paths so their sample streams coincide."""
         rng = np.random.RandomState(self.seed + it)
         B = self.wave_size
         # one prompt per group, repeated group-wise (grouped rollouts)
@@ -101,14 +113,34 @@ class GRPOTask:
         stops = np.minimum(scale_spread(stops, self.length_variance),
                            self.max_len)
         stops = np.maximum(stops, self.prompt_len + 1)
+        rewards = rng.rand(self.prompts, self.group)
+        adv = (rewards - rewards.mean(axis=1, keepdims=True)).reshape(-1)
+        return prompts, stops, adv
+
+    def _engine_wave(self, it: int, params, version: int) -> List[Rollout]:
+        prompts, stops, adv = self._wave_inputs(it)
+        if self.rollout_source == "continuous":
+            # the live-pushed engine holds its own versioned params; when
+            # driven without a pusher, install the handed-down ones
+            if self.engine.version < version:
+                self.engine.publish(params, version)
+            start = len(self.engine.completed)
+            for b in range(self.wave_size):
+                self.engine.submit(prompts[b],
+                                   self.max_len - self.prompt_len,
+                                   stop_length=int(stops[b]))
+            self.engine.run()
+            done = sorted(self.engine.completed[start:],
+                          key=lambda c: c.rid)
+            return [Rollout(tokens=c.sequence, advantage=float(a),
+                            version=c.weight_version)
+                    for c, a in zip(done, adv)]
         # greedy decode: a group's rollouts differ only by their stop
         # lengths (no temperature sampling in the synthetic zoo) — rewards
         # are seeded draws either way, so advantages stay well-defined
         res = self.engine.generate(
             params, prompts, self.max_len - self.prompt_len,
             stop_lengths=stops)
-        rewards = rng.rand(self.prompts, self.group)
-        adv = (rewards - rewards.mean(axis=1, keepdims=True)).reshape(-1)
         return [Rollout(tokens=t, advantage=float(a), version=version)
                 for t, a in zip(res.sequences, adv)]
 

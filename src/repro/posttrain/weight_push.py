@@ -20,6 +20,7 @@ bit-identical to the trainer's (gather is exact).
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Optional
 
 import jax
@@ -95,4 +96,34 @@ class WeightPusher:
             self.params = self._fn(params)
         self.version = version
         self.pushes += 1
+        return self.params
+
+    @property
+    def blocks_generator(self) -> bool:
+        """Whether this backend's push is a fleet-wide barrier the decode
+        slots must join (``push_blocks_trainer``: True for 'collective',
+        False for the p2p ODC family — the paper's non-intrusive push)."""
+        return bool(B.get_backend(self.gcfg.comm).push_blocks_trainer)
+
+    def push_live(self, engine, params, version: int):
+        """Refresh a RUNNING continuous engine between decode steps.
+
+        Materializes the trainer's shards exactly as ``push`` does, then
+        publishes them into the engine under the backend's barrier
+        semantics: a collective push stalls every decode slot for the
+        measured push time (a broadcast is a barrier every consumer
+        joins), a p2p push lands on the engine's push lane only and
+        overlaps subsequent decode steps.  In-flight requests keep the
+        version they pinned at admission — the engine's no-torn-reads
+        contract — so a push never perturbs a token already scheduled.
+        """
+        t0 = time.perf_counter()
+        with self.mesh:
+            self.params = self._fn(params)
+        jax.block_until_ready(self.params)
+        dt = time.perf_counter() - t0
+        self.version = version
+        self.pushes += 1
+        engine.publish(self.params, version,
+                       barrier=self.blocks_generator, push_time=dt)
         return self.params

@@ -3,11 +3,13 @@ from repro.sim.engine import (  # noqa: F401
     CommModel,
     GenModel,
     PosttrainResult,
+    ServeResult,
     SimConfig,
     SimResult,
     bubble_rate,
     simulate_minibatch,
     simulate_posttrain,
+    simulate_serve,
     simulate_training,
 )
 from repro.sim.timeline import (  # noqa: F401

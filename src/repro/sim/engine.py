@@ -406,6 +406,12 @@ class GenModel:
     the push cost is paid only where it is not hidden under decode.
     False (default) charges the push before the wave starts, the
     pre-refactor behavior exactly.
+
+    ``arrival_spacing``: scheme='continuous' only — seconds between
+    successive request arrivals within a wave (prompts trickle in instead
+    of landing as one burst).  0.0 (default) is a simultaneous burst, in
+    which case the continuous scheme degenerates float-exactly to
+    scheme='async''s greedy-FIFO slot placement (golden-tested).
     """
 
     time_per_token: float = 4e-5
@@ -413,6 +419,7 @@ class GenModel:
     push_layers: Optional[int] = None
     slot_speeds: tuple = ()
     push_overlap: bool = False
+    arrival_spacing: float = 0.0
 
 
 @dataclasses.dataclass
@@ -458,6 +465,17 @@ def simulate_posttrain(steps, *, scheme: str = "async", comm: str = "odc",
                     consumes rollouts as soon as the wave lands instead of
                     idling through the generation phase.  staleness=0 is
                     exactly 'sync' (same floats).
+    scheme='continuous'
+                    request-level admission on top of 'async': each
+                    request in wave t arrives ``gen.arrival_spacing``
+                    seconds after the previous one (relative to the
+                    wave's weight gate) and is admitted to the slot that
+                    can start it earliest, waiting for its own arrival —
+                    the in-flight batching engine's schedule
+                    (``repro.posttrain.ContinuousGenerationEngine``).
+                    With a simultaneous burst (spacing 0.0, the default)
+                    the slot choice and every float reduce to 'async''s
+                    greedy-FIFO placement exactly (golden-tested).
 
     ``comm`` names the CommBackend used for BOTH the training step's
     gradient communication (via ``simulate_minibatch``) and the weight
@@ -470,9 +488,9 @@ def simulate_posttrain(steps, *, scheme: str = "async", comm: str = "odc",
     trainer lane, push lane — so trainer idle can be attributed to
     rollout gates vs push barriers per step (``idle_attribution``).
     """
-    if scheme not in ("sync", "async"):
+    if scheme not in ("sync", "async", "continuous"):
         raise ValueError(f"unknown posttrain scheme {scheme!r}; "
-                         "one of ('sync', 'async')")
+                         "one of ('sync', 'async', 'continuous')")
     K = 0 if scheme == "sync" else max(0, int(staleness))
     T = len(steps)
     if T == 0:
@@ -516,10 +534,25 @@ def simulate_posttrain(steps, *, scheme: str = "async", comm: str = "odc",
             tl.lane("push").place(train_finish[v - 1], push, "push",
                                   f"weights v{v} -> wave {t}")
         arrival = landed
-        for length in lens:
-            s = min(range(slots), key=lambda i: slot_lanes[i].t)
-            lane = slot_lanes[s]
-            lane.wait(gate, "gate", f"weights v{v} gate")
+        spacing = gen.arrival_spacing if scheme == "continuous" else 0.0
+        for r, length in enumerate(lens):
+            if scheme == "continuous":
+                # request-level admission: request r of wave t arrives
+                # r*spacing after the wave's weight gate and takes the
+                # slot that can START it earliest (ties by least-loaded,
+                # which for a simultaneous burst is exactly the async
+                # scheme's greedy-FIFO min-cursor choice — same floats)
+                arr = gate + r * spacing
+                s = min(range(slots),
+                        key=lambda i: (max(slot_lanes[i].t, arr),
+                                       slot_lanes[i].t))
+                lane = slot_lanes[s]
+                lane.wait(gate, "gate", f"weights v{v} gate")
+                lane.wait(arr, "gate", f"req {t}.{r} arrival")
+            else:
+                s = min(range(slots), key=lambda i: slot_lanes[i].t)
+                lane = slot_lanes[s]
+                lane.wait(gate, "gate", f"weights v{v} gate")
             dur = length * gen.time_per_token
             if gen.slot_speeds:
                 dur = dur / gen.slot_speeds[s]
@@ -552,3 +585,175 @@ def simulate_posttrain(steps, *, scheme: str = "async", comm: str = "odc",
         observed_staleness=observed,
         timeline=tl,
     )
+
+
+# ===========================================================================
+# serving: wave-at-a-time vs continuous batching under live weight pushes
+# ===========================================================================
+@dataclasses.dataclass
+class ServeResult:
+    """One simulated serving run over a request stream."""
+
+    makespan: float
+    tokens: int                 # generated tokens served
+    push_stall: float           # decode-lane seconds lost to weight pushes
+    pushes_applied: int
+    timeline: Optional[Timeline] = dataclasses.field(
+        default=None, compare=False, repr=False)
+
+    @property
+    def throughput(self) -> float:
+        """Generated tokens per second."""
+        return self.tokens / self.makespan if self.makespan > 0 else 0.0
+
+    @property
+    def idle_attribution(self) -> Optional[Dict[str, Dict[str, float]]]:
+        if self.timeline is None:
+            return None
+        return self.timeline.idle_breakdown(self.makespan)
+
+
+def simulate_serve(requests, *, scheme: str, slots: int, comm: str = "odc",
+                   cfg: SimConfig = SimConfig(), gen: GenModel = GenModel(),
+                   push_every: float = 0.0, pushes: int = 0,
+                   push_layers: Optional[int] = None) -> ServeResult:
+    """Makespan of serving a request stream on ``slots`` decode lanes.
+
+    ``requests``: list of (arrival_time, generated_tokens) — the stream
+    the engine must serve, FIFO by arrival (ties by submission order).
+
+    scheme='wave'        wave-at-a-time: requests are grouped FIFO into
+                         waves of ``slots``; a wave starts once every
+                         member arrived and the previous wave fully
+                         drained, and every slot is held to the wave's
+                         LONGEST request (the request-level barrier the
+                         continuous engine removes).
+    scheme='continuous'  in-flight batching: each request is admitted to
+                         the slot that can start it earliest; a slot that
+                         finishes a short request immediately takes the
+                         next queued one.
+
+    Live weight refresh: ``pushes`` versions land at ``k * push_every``
+    (k = 1..pushes), each costing the backend's
+    ``weight_push_time(cfg.comm, slots, push_layers)``.  How a push
+    charges the decode lanes follows the backend and ``gen.push_overlap``:
+
+      * ``push_blocks_trainer`` ('collective'): a fleet-wide barrier —
+        every lane syncs to the slowest, then stalls the push;
+      * p2p, no overlap ('odc', 'hier'): each lane independently stalls
+        the push duration at its own next request boundary — no sync;
+      * p2p + ``gen.push_overlap`` ('odc-overlap'): the push rides the
+        dedicated push lane, fully hidden under decode — zero stall.
+
+    Pushes interrupt lanes only at request boundaries (the continuous
+    engine's publish lands between decode steps; a request in flight is
+    never torn).  ``push_stall`` sums the decode-lane seconds charged.
+    """
+    if scheme not in ("wave", "continuous"):
+        raise ValueError(f"unknown serve scheme {scheme!r}; "
+                         "one of ('wave', 'continuous')")
+    if slots <= 0:
+        raise ValueError("slots must be positive")
+    backend = _scheme_backend(comm)
+    layers = cfg.num_layers if push_layers is None else push_layers
+    push = (backend.weight_push_time(cfg.comm, slots, layers)
+            if pushes > 0 and push_every > 0 else 0.0)
+    push_t = [k * push_every for k in range(1, pushes + 1)] if push else []
+    barrier = backend.push_blocks_trainer
+    overlap = gen.push_overlap
+    tpt = gen.time_per_token
+
+    tl = Timeline(source="sim",
+                  meta={"model": "serve", "scheme": scheme,
+                        "comm": backend.name, "slots": slots,
+                        "push_overlap": overlap})
+    lanes = [tl.lane(f"slot{i}") for i in range(slots)]
+    order = sorted(range(len(requests)),
+                   key=lambda i: (requests[i][0], i))
+    stall = 0.0
+    applied_global = 0              # pushes applied fleet-wide (barrier)
+    applied_slot = [0] * slots      # pushes applied per lane (p2p)
+
+    def place_push_event(k):
+        tl.lane("push").place(push_t[k], push, "push", f"weights v{k + 1}")
+
+    def apply_barrier_pushes(up_to: float):
+        """Collective: every push due by ``up_to`` joins all lanes at a
+        fleet-wide barrier (sync to the slowest, then the push)."""
+        nonlocal applied_global, stall
+        while applied_global < len(push_t) and push_t[applied_global] <= up_to:
+            k = applied_global
+            bar = max([push_t[k]] + [ln.t for ln in lanes])
+            for ln in lanes:
+                stall += max(0.0, bar - ln.t) + push
+                ln.wait(bar, "barrier", f"push sync v{k + 1}")
+                ln.advance(push, "push", f"push barrier v{k + 1}")
+            place_push_event(k)
+            applied_global += 1
+
+    def apply_slot_pushes(s: int, start: float):
+        """p2p, unhidden: lane ``s`` refreshes every version due by
+        ``start`` at its own boundary; other lanes keep decoding (no
+        sync).  The push-lane annotation is emitted by the first lane to
+        apply each version."""
+        nonlocal stall
+        ln = lanes[s]
+        while (applied_slot[s] < len(push_t)
+               and push_t[applied_slot[s]] <= start):
+            k = applied_slot[s]
+            if max(applied_slot) <= k:
+                place_push_event(k)
+            ln.advance(push, "push", f"push v{k + 1}")
+            stall += push
+            applied_slot[s] += 1
+
+    if overlap:
+        # hidden pushes: annotate the push lane up front; lanes never stall
+        for k in range(len(push_t)):
+            place_push_event(k)
+
+    if scheme == "continuous":
+        for rid in order:
+            arr, length = requests[rid]
+            if barrier:
+                tent = min(max(ln.t, arr) for ln in lanes)
+                apply_barrier_pushes(tent)
+            s = min(range(slots),
+                    key=lambda i: (max(lanes[i].t, arr), lanes[i].t))
+            lane = lanes[s]
+            start = max(lane.t, arr)
+            if not barrier and not overlap:
+                apply_slot_pushes(s, start)
+            elif not barrier and overlap:
+                applied_slot[s] = len(push_t)
+            lane.wait(arr, "gate", f"req {rid} arrival")
+            lane.advance(length * tpt, "decode", f"req {rid}")
+    else:
+        waves = [order[i:i + slots] for i in range(0, len(order), slots)]
+        for w, wave in enumerate(waves):
+            ready = max(requests[rid][0] for rid in wave)
+            start = max([ready] + [ln.t for ln in lanes])
+            if barrier:
+                apply_barrier_pushes(start)
+            elif not overlap:
+                for s in range(slots):
+                    apply_slot_pushes(s, start)
+            start = max([ready] + [ln.t for ln in lanes])
+            dur = max(requests[rid][1] for rid in wave) * tpt
+            for i, rid in enumerate(wave):
+                lane = lanes[i]
+                lane.wait(start, "barrier", f"wave {w} start")
+                lane.advance(requests[rid][1] * tpt, "decode", f"req {rid}")
+                lane.wait(start + dur, "barrier", f"wave {w} drain")
+            for i in range(len(wave), slots):
+                lanes[i].wait(start + dur, "barrier", f"wave {w} drain")
+
+    # p2p lanes that drain before late pushes refresh on their own time
+    # with nothing left to stall; the push lane's annotations never extend
+    # the serving makespan (only slot lanes serve)
+    makespan = max(ln.t for ln in lanes)
+    total = sum(int(l) for _, l in requests)
+    return ServeResult(makespan=makespan, tokens=total, push_stall=stall,
+                       pushes_applied=(applied_global if barrier
+                                       else max(applied_slot, default=0)),
+                       timeline=tl)

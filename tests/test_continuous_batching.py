@@ -1,0 +1,493 @@
+"""Invariant suite for continuous batching + live weight refresh.
+
+Locks down the ``ContinuousGenerationEngine`` rebuild of the serving
+path (``repro.posttrain.engine``) and its simulator twin
+(``repro.sim.simulate_serve`` / ``simulate_posttrain(scheme=
+'continuous')``):
+
+  * **BlockAllocator** — free + assigned partitions the block set under
+    ARBITRARY admission/retirement schedules; double-assign, double-free
+    and foreign frees raise.  Property-tested (hypothesis when
+    installed, seeded schedules always).
+  * **Admission** — never exceeds the slot count nor the KV-block
+    budget; FIFO head-of-line (a small request cannot starve the head).
+  * **Bit-identity** — every request's tokens are bit-identical to the
+    wave engine's ``generate()`` for the same prompt under the same
+    weights, regardless of which slot it landed in, when it was
+    admitted, or which other requests shared its decode steps.
+  * **Live push fault-injection** — a version published mid-flight
+    reaches only requests admitted after it: every completion's tokens
+    come from exactly ONE version's weights (no torn reads), p2p pushes
+    charge zero decode stall and overlap decode on the trace's push
+    lane, collective pushes stall every slot lane
+    (``push_blocks_trainer``).
+  * **Golden degeneration** — ``simulate_posttrain(scheme='continuous')``
+    with a simultaneous burst reduces float-exactly to the async
+    greedy-FIFO schedule; ``simulate_serve`` ties wave vs continuous
+    exactly on equal-length bursts; ``BENCH_async.json`` and
+    ``BENCH_serve.json`` regenerate byte-equal.
+"""
+import os
+import sys
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core.gspmd import GSPMDConfig, ShardingRules
+from repro.launch.mesh import make_host_mesh
+from repro.models import transformer as T
+from repro.posttrain import (
+    BlockAllocator, BlockAllocatorError, ContinuousGenerationEngine,
+    GenerationEngine, WeightPusher,
+)
+from repro.sim import GenModel, SimConfig, simulate_posttrain, simulate_serve
+from repro.sim.trace import TraceRecorder
+
+KEY = jax.random.PRNGKey(0)
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ===========================================================================
+# BlockAllocator invariants
+# ===========================================================================
+def _run_schedule(alloc, ops):
+    """Replay (size, owner) admissions / retirement picks, checking the
+    partition invariant after every op."""
+    live = {}  # owner -> block table
+    for op, arg in ops:
+        if op == "alloc":
+            size, owner = arg
+            n = alloc.blocks_for(size)
+            if alloc.can_alloc(n) and owner not in live:
+                live[owner] = alloc.alloc(n, owner)
+        else:  # retire the arg'th live owner (mod count)
+            if live:
+                owner = sorted(live)[arg % len(live)]
+                alloc.free(live.pop(owner), owner)
+        assert alloc.free_blocks + alloc.assigned_blocks == alloc.num_blocks
+        alloc.check()
+    # every block id assigned at most once, tables disjoint
+    flat = [b for t in live.values() for b in t]
+    assert len(flat) == len(set(flat))
+    for owner, table in list(live.items()):
+        alloc.free(table, owner)
+    alloc.check()
+    assert alloc.free_blocks == alloc.num_blocks
+
+
+def test_allocator_seeded_random_schedules():
+    for seed in range(20):
+        rng = np.random.RandomState(seed)
+        alloc = BlockAllocator(num_blocks=int(rng.randint(1, 40)),
+                               block_size=int(rng.randint(1, 64)))
+        ops = []
+        for i in range(200):
+            if rng.rand() < 0.6:
+                ops.append(("alloc", (int(rng.randint(1, 512)), i)))
+            else:
+                ops.append(("free", int(rng.randint(0, 1 << 30))))
+        _run_schedule(alloc, ops)
+
+
+def test_allocator_rejects_double_free_and_foreign_free():
+    alloc = BlockAllocator(num_blocks=4, block_size=8)
+    mine = alloc.alloc(2, owner=1)
+    theirs = alloc.alloc(1, owner=2)
+    with pytest.raises(BlockAllocatorError):
+        alloc.free(theirs, owner=1)        # foreign owner
+    alloc.free(mine, owner=1)
+    with pytest.raises(BlockAllocatorError):
+        alloc.free(mine, owner=1)          # double free
+    with pytest.raises(BlockAllocatorError):
+        alloc.alloc(4, owner=3)            # over-allocation (1 still held)
+    with pytest.raises(BlockAllocatorError):
+        alloc.alloc(0, owner=3)
+    alloc.check()
+
+
+def test_allocator_blocks_for_arithmetic():
+    alloc = BlockAllocator(num_blocks=8, block_size=16)
+    assert alloc.blocks_for(1) == 1
+    assert alloc.blocks_for(16) == 1
+    assert alloc.blocks_for(17) == 2
+    assert alloc.blocks_for(0) == 1  # a request always holds >= 1 block
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        num_blocks=st.integers(1, 64),
+        block_size=st.integers(1, 64),
+        ops=st.lists(
+            st.one_of(
+                st.tuples(st.just("alloc"),
+                          st.tuples(st.integers(1, 1024),
+                                    st.integers(0, 10_000))),
+                st.tuples(st.just("free"), st.integers(0, 10_000))),
+            max_size=300),
+    )
+    def test_allocator_property_arbitrary_schedules(num_blocks, block_size,
+                                                    ops):
+        _run_schedule(BlockAllocator(num_blocks, block_size), ops)
+except ImportError:  # the seeded schedules above still run
+    pass
+
+
+# ===========================================================================
+# engine fixtures
+# ===========================================================================
+@pytest.fixture(scope="module")
+def serve_setup():
+    cfg = get_reduced("qwen-1.5b")
+    mesh = make_host_mesh()
+    gcfg = GSPMDConfig(rules=ShardingRules(), block_kv=64)
+    params = T.init_params(cfg, KEY)
+    return cfg, mesh, gcfg, params
+
+
+def _prompts(n, s, vocab, seed=0):
+    return np.asarray(jax.random.randint(jax.random.PRNGKey(seed), (n, s),
+                                         1, vocab), np.int32)
+
+
+def _wave_reference(setup, prompts, gen_steps, params=None):
+    """The wave engine's greedy grid — the per-row ground truth (XLA CPU
+    decodes batch rows independently, so row b is the same floats no
+    matter which rows share the batch)."""
+    cfg, mesh, gcfg, p0 = setup
+    res = GenerationEngine(cfg, mesh, gcfg).generate(
+        params if params is not None else p0, prompts, gen_steps)
+    return np.asarray(res.generated)
+
+
+# ===========================================================================
+# admission invariants + bit-identity (the tentpole's core contract)
+# ===========================================================================
+def test_continuous_matches_wave_bitwise_with_staggered_admission(
+        serve_setup):
+    """6 mixed-length requests over 3 slots: retirement frees blocks that
+    admit queued requests mid-decode, and every request's tokens still
+    equal the wave engine's row bit-for-bit."""
+    cfg, mesh, gcfg, params = serve_setup
+    S, G, slots = 8, 8, 3
+    n = 6
+    prompts = _prompts(n, S, cfg.vocab_size, seed=1)
+    stops = [S + g for g in (8, 3, 5, 2, 8, 4)]
+
+    engine = ContinuousGenerationEngine(cfg, mesh, gcfg, slots=slots,
+                                        max_len=S + G, block_size=4)
+    engine.publish(params, 0)
+    for b in range(n):
+        engine.submit(prompts[b], G, stop_length=stops[b])
+
+    seen_active = 0
+    while True:
+        # invariant: admission never exceeds slots nor the block budget
+        assert engine.active <= slots
+        assert (engine.allocator.assigned_blocks
+                <= engine.allocator.num_blocks)
+        seen_active = max(seen_active, engine.active)
+        if not engine.step():
+            break
+    done = engine.run()
+
+    assert seen_active == slots              # the queue really filled them
+    assert len(done) == n
+    assert engine.allocator.free_blocks == engine.allocator.num_blocks
+    ref = _wave_reference(serve_setup, prompts, G)
+    for c in sorted(done, key=lambda c: c.rid):
+        want = ref[c.rid, : stops[c.rid] - S]
+        assert np.array_equal(c.generated, want), f"request {c.rid}"
+        assert np.array_equal(c.sequence[:S], prompts[c.rid])
+        assert c.finish_reason == "stop_length"  # checked before max_new
+        assert c.weight_version == 0
+    # later submissions were admitted after earlier ones retired slots
+    assert max(c.admitted_step for c in done) > 0
+
+
+def test_admission_is_fifo_head_of_line(serve_setup):
+    """A big head request that doesn't fit must NOT be jumped by a small
+    one behind it — the queue waits until retirement frees its blocks."""
+    cfg, mesh, gcfg, params = serve_setup
+    S = 4
+    engine = ContinuousGenerationEngine(cfg, mesh, gcfg, slots=2,
+                                        max_len=16, block_size=4)
+    engine.publish(params, 0)
+    prompts = _prompts(4, S, cfg.vocab_size, seed=2)
+    engine.submit(prompts[0], 12)            # 4 blocks (whole budget / 2)
+    engine.submit(prompts[1], 12)            # 4 blocks — allocator now full
+    engine.submit(prompts[2], 12)            # head of queue: needs 4 blocks
+    engine.submit(prompts[3], 1)             # tiny, COULD fit sooner
+    engine.step()
+    assert engine.active == 2 and engine.queued == 2
+    done = engine.run()
+    by_rid = {c.rid: c for c in done}
+    # the tiny request was admitted with (or after) the blocked head,
+    # never before it
+    assert by_rid[3].admitted_step >= by_rid[2].admitted_step
+    assert len(done) == 4
+    engine.allocator.check()
+
+
+def test_submit_and_publish_validation(serve_setup):
+    cfg, mesh, gcfg, params = serve_setup
+    engine = ContinuousGenerationEngine(cfg, mesh, gcfg, slots=2, max_len=8)
+    with pytest.raises(RuntimeError):        # no params published yet
+        engine.submit(_prompts(1, 4, cfg.vocab_size)[0], 2)
+    engine.publish(params, 0)
+    with pytest.raises(ValueError):          # prompt + budget > max_len
+        engine.submit(_prompts(1, 4, cfg.vocab_size)[0], 5)
+    with pytest.raises(ValueError):          # versions must increase
+        engine.publish(params, 0)
+    with pytest.raises(NotImplementedError):  # non-dense family
+        ContinuousGenerationEngine(get_reduced("mamba2-2.7b"), mesh, gcfg,
+                                   slots=2, max_len=8)
+
+
+def test_eos_stops_a_single_request(serve_setup):
+    """eos_id retires exactly the emitting request; its slot-mates run to
+    their own stops with unchanged tokens."""
+    cfg, mesh, gcfg, params = serve_setup
+    S, G = 8, 8
+    prompts = _prompts(3, S, cfg.vocab_size, seed=3)
+    ref = _wave_reference(serve_setup, prompts, G)
+    # eos must FIRST appear at position k (greedy rows may repeat tokens)
+    row = ref[1]
+    k = next(i for i in range(1, G - 1) if row[i] not in row[:i])
+    eos = int(row[k])
+
+    engine = ContinuousGenerationEngine(cfg, mesh, gcfg, slots=3,
+                                        max_len=S + G)
+    engine.publish(params, 0)
+    engine.submit(prompts[0], G)
+    engine.submit(prompts[1], G, eos_id=eos)
+    engine.submit(prompts[2], G)
+    done = {c.rid: c for c in engine.run()}
+    assert done[1].finish_reason == "eos"
+    assert len(done[1].generated) == k + 1 and done[1].generated[-1] == eos
+    assert np.array_equal(done[1].generated, ref[1, : k + 1])
+    for rid in (0, 2):
+        assert done[rid].finish_reason == "max_new"
+        assert np.array_equal(done[rid].generated, ref[rid])
+
+
+@pytest.mark.slow
+def test_continuous_matches_wave_bitwise_random_streams(serve_setup):
+    """Property sweep: random slot counts / budgets / block sizes, tokens
+    always bit-identical to the wave grid."""
+    cfg, mesh, gcfg, params = serve_setup
+    S, G = 8, 8
+    for seed in range(4):
+        rng = np.random.RandomState(seed)
+        slots = int(rng.randint(2, 5))
+        n = int(rng.randint(slots + 1, 10))
+        prompts = _prompts(n, S, cfg.vocab_size, seed=100 + seed)
+        budgets = rng.randint(1, G + 1, size=n)
+        engine = ContinuousGenerationEngine(
+            cfg, mesh, gcfg, slots=slots, max_len=S + G,
+            block_size=int(rng.choice([2, 4, 8, 16])))
+        engine.publish(params, 0)
+        for b in range(n):
+            engine.submit(prompts[b], int(budgets[b]))
+        done = engine.run()
+        ref = _wave_reference(serve_setup, prompts, G)
+        assert len(done) == n
+        for c in done:
+            assert np.array_equal(c.generated, ref[c.rid, : budgets[c.rid]])
+        assert engine.allocator.free_blocks == engine.allocator.num_blocks
+
+
+# ===========================================================================
+# live weight refresh: fault injection
+# ===========================================================================
+def _v1_params(cfg):
+    """A distinct weight version (fresh init, different key — a uniform
+    rescale would cancel through RMSNorm and leave the argmax grid
+    unchanged)."""
+    return T.init_params(cfg, jax.random.PRNGKey(1))
+
+
+def test_live_push_every_request_exactly_one_version(serve_setup):
+    """v1 published mid-flight: in-flight requests finish under v0 with
+    tokens bitwise from v0's weights, requests admitted after the push
+    decode bitwise under v1 — while sharing decode steps with v0 slots."""
+    cfg, mesh, gcfg, params0 = serve_setup
+    params1 = _v1_params(cfg)
+    S, G = 8, 8
+    prompts = _prompts(3, S, cfg.vocab_size, seed=4)
+    ref0 = _wave_reference(serve_setup, prompts, G, params=params0)
+    ref1 = _wave_reference(serve_setup, prompts, G, params=params1)
+    assert not np.array_equal(ref0, ref1)    # the versions are observable
+
+    rec = TraceRecorder(meta={"clock": "scheduled"})
+    engine = ContinuousGenerationEngine(cfg, mesh, gcfg, slots=2,
+                                        max_len=S + G, trace=rec)
+    engine.publish(params0, 0)
+    engine.submit(prompts[0], G)                    # rid 0: runs the full G
+    engine.submit(prompts[1], G, stop_length=S + 2)  # rid 1: retires early
+    engine.submit(prompts[2], G, stop_length=S + 6)  # rid 2: admitted later
+    engine.step()                            # rid 1 hits its stop here
+    engine.publish(params1, 1, push_time=5.0)  # p2p: no barrier flag
+    done = {c.rid: c for c in engine.run()}
+
+    assert [done[r].weight_version for r in range(3)] == [0, 0, 1]
+    assert np.array_equal(done[0].generated, ref0[0])
+    assert np.array_equal(done[1].generated, ref0[1, :2])
+    assert np.array_equal(done[2].generated, ref1[2, :6])
+    # rid 2 (v1) decoded concurrently with rid 0 (v0): the engine ran
+    # mixed-version steps, and neither corrupted the other
+    assert done[2].admitted_step < done[0].finished_step
+    # a p2p push never stalls decode ...
+    assert engine.push_stall_s == 0.0
+    # ... and on the trace it lands on the push lane, overlapping decode
+    lanes = {ln.name: ln for ln in rec.timeline.lanes}
+    push, = [e for e in lanes["push"].events if e.kind == "push"]
+    overlapped = [e for ln in rec.timeline.lanes
+                  if ln.name.startswith("slot")
+                  for e in ln.events
+                  if e.kind == "decode"
+                  and e.start < push.end and e.end > push.start]
+    assert overlapped, "p2p push did not overlap any decode step"
+    assert not any(e.kind == "push" for ln in rec.timeline.lanes
+                   if ln.name.startswith("slot") for e in ln.events)
+
+
+def test_live_push_collective_barrier_stalls_every_slot(serve_setup):
+    cfg, mesh, gcfg, params0 = serve_setup
+    S, G, slots = 8, 4, 2
+    rec = TraceRecorder(meta={"clock": "scheduled"})
+    engine = ContinuousGenerationEngine(cfg, mesh, gcfg, slots=slots,
+                                        max_len=S + G, trace=rec)
+    engine.publish(params0, 0)
+    for b in range(slots):
+        engine.submit(_prompts(slots, S, cfg.vocab_size, seed=5)[b], G)
+    engine.step()
+    engine.publish(_v1_params(cfg), 1, barrier=True, push_time=0.5)
+    engine.run()
+
+    assert engine.push_stall_s == 0.5 * slots
+    lanes = {ln.name: ln for ln in rec.timeline.lanes}
+    push, = [e for e in lanes["push"].events if e.kind == "push"]
+    for s in range(slots):
+        stalls = [e for e in lanes[f"slot{s}"].events if e.kind == "push"]
+        assert len(stalls) == 1 and stalls[0].duration == 0.5
+        # the barrier is exclusive: decode resumes only after it ends
+        assert not any(e.kind == "decode"
+                       and e.start < push.end and e.end > push.start
+                       for e in lanes[f"slot{s}"].events)
+
+
+@pytest.mark.parametrize("comm,barrier", [("odc", False), ("hier", False),
+                                          ("collective", True)])
+def test_weight_pusher_routes_barrier_by_backend(serve_setup, comm, barrier):
+    """push_live maps push_blocks_trainer to the engine's barrier flag:
+    only 'collective' charges decode stall."""
+    cfg, mesh, _, params = serve_setup
+    gcfg = GSPMDConfig(rules=ShardingRules(), comm=comm, block_kv=64)
+    pusher = WeightPusher(cfg, mesh, gcfg)
+    assert pusher.blocks_generator is barrier
+    engine = ContinuousGenerationEngine(cfg, mesh, gcfg, slots=2, max_len=8)
+    pusher.push_live(engine, params, 0)
+    assert engine.version == 0
+    assert (engine.push_stall_s > 0.0) is barrier
+    # the pushed params are the materialized trainer params, bit-for-bit
+    for a, b in zip(jax.tree.leaves(engine._params[0]),
+                    jax.tree.leaves(params)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# ===========================================================================
+# golden degeneration: sim continuous ≡ async on simultaneous bursts
+# ===========================================================================
+def _sim_steps(n=4, seed=0, world=8):
+    from repro.balance import lb_mini
+    from repro.data import sample_lengths
+
+    steps = []
+    for t in range(n):
+        lens = [min(int(l), 16_384)
+                for l in sample_lengths("aime", world * 4, seed=seed + t)]
+        steps.append((lb_mini(lens, world, 16_384), lens))
+    return steps
+
+
+@pytest.mark.parametrize("comm", ["odc", "collective", "odc-overlap"])
+@pytest.mark.parametrize("staleness", [0, 1, 2])
+def test_sim_continuous_degenerates_to_async(comm, staleness):
+    steps = _sim_steps()
+    kw = dict(comm=comm, staleness=staleness, cfg=SimConfig())
+    for speeds in ((), (1.0, 1.3, 0.8, 1.0, 1.1, 0.9, 1.2, 1.0)):
+        gen = GenModel(time_per_token=20e-6, slot_speeds=speeds,
+                       push_overlap=(comm == "odc-overlap"))
+        a = simulate_posttrain(steps, scheme="async", gen=gen, **kw)
+        c = simulate_posttrain(steps, scheme="continuous", gen=gen, **kw)
+        assert c.makespan == a.makespan      # float-exact, not allclose
+        assert c.gen_time == a.gen_time
+        assert c.train_start == a.train_start
+        assert c.train_finish == a.train_finish
+        assert c.observed_staleness == a.observed_staleness
+
+
+def test_sim_continuous_spacing_changes_the_schedule():
+    steps = _sim_steps()
+    gen0 = GenModel(time_per_token=20e-6)
+    gen1 = GenModel(time_per_token=20e-6, arrival_spacing=2e-3)
+    a = simulate_posttrain(steps, scheme="async", gen=gen0)
+    c = simulate_posttrain(steps, scheme="continuous", gen=gen1)
+    assert c.makespan > a.makespan           # arrivals gate admission
+
+
+def test_simulate_serve_schemes_tie_on_equal_length_burst():
+    reqs = [(0.0, 512)] * 16
+    for comm in ("odc", "collective"):
+        w = simulate_serve(reqs, scheme="wave", slots=4, comm=comm,
+                           pushes=2, push_every=2e-3, push_layers=8)
+        c = simulate_serve(reqs, scheme="continuous", slots=4, comm=comm,
+                           pushes=2, push_every=2e-3, push_layers=8)
+        assert w.makespan == c.makespan
+        assert w.tokens == c.tokens == 16 * 512
+
+
+def test_simulate_serve_continuous_beats_wave_on_spread():
+    rng = np.random.RandomState(0)
+    reqs = [(0.0, int(l)) for l in rng.randint(128, 1025, size=32)]
+    w = simulate_serve(reqs, scheme="wave", slots=4, comm="odc")
+    c = simulate_serve(reqs, scheme="continuous", slots=4, comm="odc")
+    assert c.makespan < w.makespan
+    assert c.throughput > w.throughput
+
+
+def _bench_bytes_match(module_name, golden, tmp_path):
+    """The golden-anchor discipline: the checked-in BENCH json must be
+    exactly what the current model emits, byte for byte."""
+    sys.path.insert(0, REPO)
+    try:
+        import importlib
+
+        mod = importlib.import_module(f"benchmarks.{module_name}")
+    finally:
+        sys.path.pop(0)
+    rows = mod.run()
+    assert mod.validate(rows) == []
+    out = mod.emit_json(rows, path=str(tmp_path / golden))
+    with open(out, "rb") as f:
+        got = f.read()
+    with open(os.path.join(REPO, "benchmarks", golden), "rb") as f:
+        want = f.read()
+    assert got == want, f"{golden} drifted from the model"
+
+
+@pytest.mark.slow
+def test_bench_async_regenerates_byte_equal(tmp_path):
+    _bench_bytes_match("async_sweep", "BENCH_async.json", tmp_path)
+
+
+@pytest.mark.slow
+def test_bench_serve_regenerates_byte_equal(tmp_path):
+    _bench_bytes_match("serve_sweep", "BENCH_serve.json", tmp_path)

@@ -30,8 +30,10 @@ def _batch(cfg, M=2, Bm=8, S=32):
     }
 
 
+# tier-1 keeps the minibatch cells; per-layer runs in the CI full job
 @pytest.mark.parametrize("comm,schedule", [
-    ("collective", "layer"), ("odc", "layer"),
+    pytest.param("collective", "layer", marks=pytest.mark.slow),
+    pytest.param("odc", "layer", marks=pytest.mark.slow),
     ("collective", "minibatch"), ("odc", "minibatch"),
 ])
 def test_flat_engine_modes_agree(comm, schedule):

@@ -412,6 +412,7 @@ def test_weight_push_time_hooks():
 # ===========================================================================
 # launch.train: save → resume bit-identity
 # ===========================================================================
+@pytest.mark.slow  # ~20s end-to-end; the CI posttrain + full jobs run it
 def test_train_save_resume_bit_identical(tmp_path):
     from repro.launch import train as train_mod
 
