@@ -1,0 +1,207 @@
+"""Pipeline (``pipe``) backend sweep: stage count × straggler skew ×
+wire precision.
+
+The ``pipe`` backend's claim: stage-partitioning the layer stack over a
+p2p ring turns the minibatch into a 1F1B stream — each stage pays one
+activation-sized send per microbatch boundary instead of a shard-set
+move, and the drain bubble replaces the collective barrier.  The
+``pipe-int8`` variant quantizes that cross-stage payload to chunked int8
+(1 value byte + one f32 scale per 256-value chunk ≈ 0.254× the fp32
+bytes), which must shrink BOTH the modeled per-message wire time and the
+end-to-end makespan whenever comm is exposed — at every skew level, not
+just on average (compression helps the critical path exactly as much as
+the uncritical ones).
+
+Grid: pipeline depth (stages = sim lanes) × straggler slowdown ×
+{(LB-Mini, odc), (LB-Mini, pipe), (LB-Mini, pipe-int8)}.
+
+Acceptance targets (checked by ``validate``):
+  * pipe-int8 makespan strictly below pipe fp32 in EVERY cell (the
+    compressed wire is a strict subset of the bytes, never a reroute);
+  * the modeled per-layer message time shrinks by the documented wire
+    factor (≈ 0.2539×) at every stage count, and the modeled weight push
+    is cheaper on multi-node meshes and identical on one node (there is
+    no inter tier to compress);
+  * the 1F1B schedule shape anchors to the textbook makespan
+    ``(M + S - 1) * (f + b)`` on uniform costs — the same
+    ``instructions_1f1b`` stream the executable ``schedule='1f1b'``
+    gradient loop issues, so sim and executable share their shape by
+    construction;
+  * makespans are monotone in the slowdown factor.
+
+Writes ``benchmarks/BENCH_pipe.json`` — a golden anchor: the CI ``pipe``
+job asserts it regenerates byte-identical.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.balance import STRATEGIES, make_straggler_profile
+from repro.core import backend as B
+from repro.data import sample_lengths
+from repro.sim import (CommModel, PIPE_1F1B, SimConfig, simulate_minibatch)
+
+# shared constants with the other sweeps so cells stay comparable
+from benchmarks.sft_throughput import MAX_TOKENS, SEEDS
+
+MINIBS = 4
+STAGES = (2, 4, 8)
+FACTORS = (1.0, 1.5, 2.0, 3.0, 4.0)
+PROFILE_KIND = "one_slow"
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "BENCH_pipe.json")
+SAMPLE_TRACE = os.path.join(os.path.dirname(__file__),
+                            "pipe_sample_trace.json")
+
+GRID = (
+    ("lb_mini", "odc"),        # flat ODC baseline, same balancer
+    ("lb_mini", "pipe"),       # 1F1B stages, fp32 p2p wire
+    ("lb_mini", "pipe-int8"),  # 1F1B stages, chunked-int8 p2p wire
+)
+
+
+def run(datasets=("longalign", "swesmith"), stages=STAGES, factors=FACTORS,
+        kind=PROFILE_KIND, max_tokens=MAX_TOKENS, seeds=SEEDS):
+    cm = CommModel()
+    cfg = SimConfig(overlap=0.0,  # fully-exposed comm, as in the other sweeps
+                    comm=cm)
+    rows = []
+    for ds in datasets:
+        for S in stages:
+            for f in factors:
+                profile = make_straggler_profile(kind, S, slow_factor=f)
+                for strat, scheme in GRID:
+                    mks, sps, br = [], [], []
+                    for s in range(seeds):
+                        lens = sample_lengths(ds, S * MINIBS, s).tolist()
+                        lens = [min(l, max_tokens) for l in lens]
+                        plan = STRATEGIES[strat](lens, S, max_tokens)
+                        r = simulate_minibatch(plan, lens, scheme=scheme,
+                                               cfg=cfg, profile=profile)
+                        mks.append(r.makespan)
+                        sps.append(len(lens) / r.makespan)
+                        br.append(r.bubble_rate)
+                    backend = B.get_backend(scheme)
+                    rows.append({
+                        "dataset": ds, "stages": S, "slowdown": f,
+                        "strategy": strat, "scheme": scheme,
+                        "makespan_s": float(np.mean(mks)),
+                        "samples_per_s": float(np.mean(sps)),
+                        "bubble_pct": 100 * float(np.mean(br)),
+                        "layer_wire_ms": 1e3 * backend.layer_comm_time(cm, S),
+                    })
+    # speedup vs the fp32 pipe on the same cell (the compression win)
+    base = {(r["dataset"], r["stages"], r["slowdown"]): r["makespan_s"]
+            for r in rows if r["scheme"] == "pipe"}
+    for r in rows:
+        b = base[(r["dataset"], r["stages"], r["slowdown"])]
+        r["speedup_vs_pipe_fp32_pct"] = 100 * (b / r["makespan_s"] - 1)
+    return rows
+
+
+def _schedule_anchor_rows(stages=STAGES, per_stage=MINIBS, t=3.0, layers=24):
+    """Uniform-cost 1F1B anchors: sim makespan vs the textbook formula."""
+    rows = []
+    for S in stages:
+        M = S * per_stage
+        mk, _ = PIPE_1F1B.step_blocks([[t] * per_stage] * S, [0.0] * S,
+                                      layers)
+        rows.append({"stages": S, "microbatches": M,
+                     "makespan_s": float(mk),
+                     "analytic_s": (M + S - 1) * t / S})
+    return rows
+
+
+def validate(rows, anchors):
+    msgs = []
+    by = {(r["dataset"], r["stages"], r["slowdown"], r["scheme"]): r
+          for r in rows}
+    datasets = sorted({r["dataset"] for r in rows})
+    stage_counts = sorted({r["stages"] for r in rows})
+    factors = sorted({r["slowdown"] for r in rows})
+    cm = CommModel()
+
+    for ds in datasets:
+        for S in stage_counts:
+            mk = lambda f, sc: by[(ds, S, f, sc)]["makespan_s"]
+            for f in factors:
+                # 1. the int8 wire wins in EVERY cell, not on average
+                if mk(f, "pipe-int8") >= mk(f, "pipe"):
+                    msgs.append(f"{ds}/stages={S}: pipe-int8 "
+                                f"{mk(f, 'pipe-int8'):.4f} not below fp32 "
+                                f"{mk(f, 'pipe'):.4f} at x{f}")
+            # 2. slowing a stage never speeds anything up
+            for _, scheme in GRID:
+                for lo, hi in zip(factors, factors[1:]):
+                    if mk(hi, scheme) < mk(lo, scheme) - 1e-9:
+                        msgs.append(f"{ds}/stages={S}/{scheme}: makespan "
+                                    f"not monotone in slowdown at x{hi}")
+    # 3. modeled per-message wire time shrinks by the documented factor
+    for S in stage_counts:
+        fp = B.PIPE.layer_comm_time(cm, S)
+        q8 = B.PIPE_INT8.layer_comm_time(cm, S)
+        if not q8 < fp:
+            msgs.append(f"stages={S}: modeled int8 wire {q8} not below "
+                        f"fp32 {fp}")
+    # 4. weight push: int8 wins across nodes, ties inside one node
+    g = cm.devices_per_node
+    if B.PIPE_INT8.weight_push_time(cm, g, 24) \
+            != B.PIPE.weight_push_time(cm, g, 24):
+        msgs.append("single-node weight push should be precision-blind")
+    for d in (2 * g, 8 * g):
+        if not (B.PIPE_INT8.weight_push_time(cm, d, 24)
+                < B.PIPE.weight_push_time(cm, d, 24)):
+            msgs.append(f"multi-node ({d} devices) weight push: int8 not "
+                        f"below fp32")
+    # 5. 1F1B schedule shape anchors to the textbook makespan
+    for a in anchors:
+        if abs(a["makespan_s"] - a["analytic_s"]) > 1e-9 * a["analytic_s"]:
+            msgs.append(f"stages={a['stages']}: 1F1B makespan "
+                        f"{a['makespan_s']} != (M+S-1)(f+b) "
+                        f"{a['analytic_s']}")
+    return msgs
+
+
+def emit_json(rows, anchors, path=BENCH_JSON):
+    from benchmarks.common import write_bench_json
+    return write_bench_json(
+        path, "pipe_sweep",
+        {"stages": list(STAGES), "minibs": MINIBS,
+         "max_tokens": MAX_TOKENS, "seeds": SEEDS,
+         "profile_kind": PROFILE_KIND, "factors": list(FACTORS),
+         "sim_overlap_fraction": 0.0,
+         "int8_wire_factor": B.PIPE.int8_wire_factor,
+         "schedule_anchors": anchors},
+        rows)
+
+
+def _write_sample_trace(path=SAMPLE_TRACE):
+    """One representative 1F1B timeline (4 stages, skewed, int8 wire) as
+    a Chrome trace — per-stage lanes with boundary sends and the drain
+    bubble visible.  Uploaded by the CI ``pipe`` job."""
+    from repro.sim.trace import write_trace
+    lens = sample_lengths("longalign", 4 * MINIBS, 0).tolist()
+    plan = STRATEGIES["lb_mini"](lens, 4, MAX_TOKENS)
+    profile = make_straggler_profile(PROFILE_KIND, 4, slow_factor=2.0)
+    r = simulate_minibatch(plan, lens, scheme="pipe-int8",
+                           cfg=SimConfig(overlap=0.0), profile=profile)
+    return write_trace(path, r.timeline)
+
+
+def main():
+    from benchmarks.common import emit
+    rows = run()
+    emit(rows)
+    anchors = _schedule_anchor_rows()
+    path = emit_json(rows, anchors)
+    print(f"# wrote {path}")
+    print(f"# wrote sample 1F1B (4-stage, one_slow x2, int8) trace "
+          f"{_write_sample_trace()}")
+    msgs = validate(rows, anchors)
+    print("# validation:", "OK" if not msgs else "; ".join(msgs))
+    return 0 if not msgs else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

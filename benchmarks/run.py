@@ -18,6 +18,9 @@
                                         heterogeneous decode slots +
                                         overlapped push, with trace-derived
                                         idle attribution
+  pipe_sweep       (ours)               1F1B pipe backend vs flat ODC,
+                                        stages × skew, fp32 vs chunked-int8
+                                        cross-stage wire
   roofline         (ours)               dry-run roofline table
 
 ``python -m benchmarks.run [module ...]`` — no args runs everything.
@@ -44,6 +47,7 @@ ALL = [
     "hier_sweep",
     "async_sweep",
     "timeline_sweep",
+    "pipe_sweep",
     "roofline",
 ]
 

@@ -25,6 +25,8 @@ def karmarkar_karp(compute_costs: Sequence[float], k_partitions: int,
     n = len(compute_costs)
     if k <= 0:
         raise ValueError("k_partitions must be positive")
+    if n == 0:
+        return [[] for _ in range(k)]  # an empty wave still needs k slots
     if k == 1:
         return [list(range(n))]
 

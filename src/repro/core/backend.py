@@ -43,6 +43,21 @@ Registered backends (canonical name → semantics):
                    path while the cross-node traffic rides node-level p2p
                    streams — avoiding both the per-layer barrier and ODC's
                    cross-node efficiency penalty (paper Fig. 11).
+  ``pipe``         pipeline-parallel ODC: parameters sharded over a 2D
+                   ``(pipe, data)`` mesh — hier's two-tier transport with
+                   the pipe axis as the p2p tier, so stage boundaries are
+                   direct sends, never collectives — scheduled by the 1F1B
+                   microbatch order (``schedule='1f1b'`` implied; the sim
+                   places per-stage lanes from the same
+                   ``instructions_1f1b`` stream the executable loop
+                   issues).
+  ``pipe-int8``    ``pipe`` with the chunked-int8 compressed wire: the
+                   cross-stage ring payload is quantized (1 byte/value +
+                   one f32 scale per ``odc.INT8_CHUNK`` values) via
+                   ``odc.ring_gather_q8`` / ``ring_scatter_accumulate_q8``
+                   and their Pallas kernels; the intra-stage collective
+                   tier stays full precision.  With compression off
+                   (``pipe``) the transport is bit-exact with ``hier``.
 
 Every legacy string flag keeps working: ``comm='collective'|'odc'`` and sim
 ``scheme='collective'|'odc'|'overlap'`` all resolve through
@@ -67,15 +82,17 @@ from repro.core import odc
 from repro.sim.timeline import (
     INDEPENDENT,
     LOCKSTEP,
+    PIPE_1F1B,
     PIPELINED,
     SchedulingPolicy,
+    instructions_1f1b,
 )
 
 AxisNames = Union[str, Sequence[str]]
 
 #: the engine schedule vocabulary (where gathers/scatters are *placed*);
 #: orthogonal to the backend (how each gather/scatter *moves bytes*).
-SCHEDULES = ("layer", "minibatch", "overlap")
+SCHEDULES = ("layer", "minibatch", "overlap", "1f1b")
 
 
 # ===========================================================================
@@ -401,10 +418,125 @@ class HierBackend(CommBackend):
         return cm.latency + intra / cm.intra_bw + inter / cm.inter_bw
 
 
+class PipeBackend(HierBackend):
+    """Pipeline-parallel ODC over a 2D ``(pipe, data)`` mesh.
+
+    Transport is hier's two-tier path with the roles recast: the trailing
+    ``data`` axis is the intra-stage tier (fused collective over the
+    devices that share a stage), and the leading ``pipe`` axis is the p2p
+    tier — every cross-stage move is a direct ring send between stage
+    peers, never a collective, which is what lets stages progress on the
+    1F1B schedule without a global barrier.  With ``compress=False`` the
+    bytes moved are bit-exact with ``hier`` on the same mesh (the fp32
+    fallback contract); ``pipe-int8`` quantizes the cross-stage payload to
+    chunked int8 (``odc.ring_gather_q8`` / ``ring_scatter_accumulate_q8``,
+    with Pallas remote-DMA realizations in ``repro.kernels.quant``).
+
+    Scheduling: ``schedule='1f1b'`` is implied — the executable gradient
+    loop issues microbatch forwards/backwards in the
+    ``instructions_1f1b`` order (warmup/steady/drain), and the sim's
+    ``PipelineStagePolicy`` places per-stage lanes from the same stream,
+    so executable and simulated schedules share their shape by
+    construction.
+
+    Simulator cost hooks: ``layer_comm_time`` models ONE stage-boundary
+    microbatch message (an activation- or gradient-sized p2p send of
+    ``act_fraction`` of a layer's shard-set bytes), not a full shard-set
+    move; ``weight_push_time`` keeps the full two-tier shard-set cost
+    (pushes move parameters, not activations), with the int8 wire
+    shrinking only the cross-stage term.
+    """
+
+    name = "pipe"
+    policy = PIPE_1F1B
+    implied_schedule = "1f1b"
+    has_kernels = True
+    #: compress the cross-stage (inter-tier) wire payload to chunked int8
+    compress = False
+    #: modeled bytes of one stage-boundary activation/grad microbatch
+    #: message, as a fraction of one layer's parameter shard set
+    #: (``CommModel.layer_param_bytes``) — a modeling knob, not measured
+    act_fraction = 0.25
+    #: chunked-int8 wire bytes per fp32 value: 1 value byte + one f32
+    #: scale per ``odc.INT8_CHUNK`` values, vs 4 bytes uncompressed
+    int8_wire_factor = (1.0 + 4.0 / odc.INT8_CHUNK) / 4.0
+
+    def gather(self, x, axis_name, *, device_profile=None):
+        inter, intra = self.split_axes(axis_name)
+        if inter is None:  # single-tier leaf: native collective
+            return odc.collective_gather(x, intra)
+        x = odc.collective_gather(x, intra)
+        prof = self._node_profile(device_profile, inter, intra)
+        if self.compress:
+            return odc.ring_gather_q8(x, inter, device_profile=prof)
+        return odc.ring_gather(x, inter, device_profile=prof)
+
+    def scatter_accumulate(self, y, axis_name, *, device_profile=None):
+        inter, intra = self.split_axes(axis_name)
+        if inter is None:
+            return odc.collective_scatter(y, intra)
+        prof = self._node_profile(device_profile, inter, intra)
+        if self.compress:
+            y = odc.ring_scatter_accumulate_q8(y, inter, device_profile=prof)
+        else:
+            y = odc.ring_scatter_accumulate(y, inter, device_profile=prof)
+        return odc.collective_scatter(y, intra)
+
+    def kernel_gather(self, x_shard, axis_name, **kw):
+        from repro.kernels import ops
+        if self.compress:
+            return ops.odc_gather_q8(x_shard, axis_name, **kw)
+        return ops.odc_gather(x_shard, axis_name, **kw)
+
+    def kernel_scatter_accumulate(self, y, axis_name, **kw):
+        from repro.kernels import ops
+        if self.compress:
+            return ops.odc_scatter_accumulate_q8(y, axis_name, **kw)
+        return ops.odc_scatter_accumulate(y, axis_name, **kw)
+
+    def layer_comm_time(self, comm_model, devices):
+        # one stage-boundary microbatch message: activations forward /
+        # gradients backward, p2p between adjacent stages
+        cm = comm_model
+        if devices <= 1:
+            return 0.0
+        vol = cm.layer_param_bytes * self.act_fraction
+        if self.compress:
+            vol *= self.int8_wire_factor
+        return cm.latency + vol / cm.inter_bw
+
+    def weight_push_time(self, comm_model, devices, layers):
+        # a push moves full parameter shard sets on hier's two-tier path;
+        # only the cross-stage p2p bytes ride the compressed wire
+        if layers <= 0:
+            return 0.0
+        cm, d = comm_model, devices
+        g = min(cm.devices_per_node, d)
+        if d <= g:
+            return layers * cm.layer_comm_time(d, False)
+        n = d // g
+        k = cm.layer_param_bytes
+        intra = (g - 1) / g * (k / n)
+        inter = (n - 1) / n * k
+        if self.compress:
+            inter *= self.int8_wire_factor
+        per = cm.latency + intra / cm.intra_bw + inter / cm.inter_bw
+        return layers * per
+
+
+class PipeInt8Backend(PipeBackend):
+    """``pipe`` with the chunked-int8 compressed cross-stage wire."""
+
+    name = "pipe-int8"
+    compress = True
+
+
 COLLECTIVE = register_backend(CollectiveBackend())
 ODC = register_backend(ODCBackend())
 ODC_OVERLAP = register_backend(OverlapODCBackend())
 HIER = register_backend(HierBackend())
+PIPE = register_backend(PipeBackend())
+PIPE_INT8 = register_backend(PipeInt8Backend())
 
 
 # ===========================================================================
@@ -414,7 +546,9 @@ def build_schedule_grad(schedule: str, *, loss_sum: Callable,
                         gather_all: Optional[Callable] = None,
                         pxform: Optional[Callable] = None,
                         prefetch: Optional[Callable] = None,
-                        checkpoint_minibatch: bool = False):
+                        checkpoint_minibatch: bool = False,
+                        pipe_stages: int = 1,
+                        pipe_interleave: bool = False):
     """The gradient loop for one device's microbatches under a schedule.
 
     Shared by the flat (``core/train_step.py``) and GSPMD
@@ -423,16 +557,73 @@ def build_schedule_grad(schedule: str, *, loss_sum: Callable,
 
       loss_sum(params, mb, pxform, prefetch) -> (nll_sum, token_count)
       gather_all(params_local) -> fully-materialized params
-                                  (schedule='minibatch' only)
+                                  (schedule='minibatch'/'1f1b')
       pxform    per-layer materialization hook ('layer'/'overlap')
       prefetch  one-slot-ahead materialization hook ('overlap' only)
-      checkpoint_minibatch  remat the minibatch scan body (GSPMD engine)
+      checkpoint_minibatch  remat the per-microbatch body (GSPMD engine)
+      pipe_stages / pipe_interleave  schedule='1f1b' only: the pipeline
+                depth whose stage-0 ``instructions_1f1b`` order the
+                microbatch forwards/backwards are issued in, and the
+                interleaved (halved-warmup) variant flag
 
     Returns grad_core(params_local, microbatches) -> (lsum, tok, grads),
     to be wrapped in shard_map and normalized by the caller.
     """
     if schedule not in SCHEDULES:
         raise ValueError(f"unknown schedule {schedule!r}; one of {SCHEDULES}")
+
+    if schedule == "1f1b":
+        if gather_all is None:
+            raise ValueError("schedule='1f1b' needs a gather_all hook")
+        if pipe_stages <= 0:
+            raise ValueError(
+                f"schedule='1f1b' needs pipe_stages >= 1, got {pipe_stages}")
+
+        def grad_core(params_local, microbatches):
+            # ODC placement under the pipeline issue order: parameters are
+            # gathered ONCE (through jax.vjp, so the matching gradient
+            # scatter-accumulate is emitted once per parameter when the
+            # accumulated cotangent is pulled back at the end — the
+            # minibatch-schedule comm volume), while the microbatch
+            # forwards/backwards are issued in the stage-0 1F1B order:
+            # warmup forwards build the in-flight residual window (bounded
+            # at warmup+1 microbatches, the whole point of 1F1B vs
+            # all-forwards-then-all-backwards), steady state alternates
+            # F/B, the drain flushes it.
+            full, gather_vjp = jax.vjp(gather_all, params_local)
+            M = jax.tree_util.tree_leaves(microbatches)[0].shape[0]
+
+            def fwd_one(fp, mb):
+                return loss_sum(fp, mb, None, None)
+
+            f = jax.checkpoint(fwd_one) if checkpoint_minibatch else fwd_one
+
+            order = instructions_1f1b(M, pipe_stages,
+                                      interleave=pipe_interleave)
+            lsum = jnp.float32(0.0)
+            tok = jnp.float32(0.0)
+            grad_full = None
+            pending = {}
+            for op, j in order:
+                if op == "F":
+                    mb = jax.tree.map(lambda x: x[j], microbatches)
+                    l, vjp_fn, t = jax.vjp(
+                        lambda fp: f(fp, mb), full, has_aux=True)
+                    lsum = lsum + l
+                    tok = tok + t
+                    pending[j] = (vjp_fn, l)
+                else:
+                    vjp_fn, l = pending.pop(j)
+                    (ct,) = vjp_fn(jnp.ones_like(l))
+                    grad_full = ct if grad_full is None else \
+                        jax.tree.map(jnp.add, grad_full, ct)
+            assert not pending, "1F1B order left unpaired forwards"
+            if grad_full is None:  # M == 0: no microbatches, zero grads
+                grad_full = jax.tree.map(jnp.zeros_like, full)
+            (grads,) = gather_vjp(grad_full)
+            return lsum, tok, grads
+
+        return grad_core
 
     if schedule == "minibatch":
         if gather_all is None:

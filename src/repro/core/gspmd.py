@@ -393,8 +393,14 @@ class GSPMDConfig:
     #                           ring) | 'odc-overlap' (odc + implied
     #                           overlap schedule) | 'hier' (intra-node
     #                           collective + inter-node ring; needs a
-    #                           2-axis data tuple) — legacy aliases resolve
-    #                           through the registry
+    #                           2-axis data tuple) | 'pipe'/'pipe-int8'
+    #                           (stage-partitioned 1F1B over a
+    #                           ('pipe', 'data') 2-axis tuple; -int8 rides
+    #                           the chunked-int8 cross-stage wire) —
+    #                           legacy aliases resolve through the registry
+    pipe_stages: int = 0  # comm='pipe': 1F1B pipeline depth; 0 = the size
+    #                       of the leading data axis (the pipe mesh axis)
+    pipe_interleave: bool = False  # halved-warmup interleaved 1F1B variant
     hybrid_pod: bool = False  # ZeRO++-style: params not sharded over pod
     moe_ep: str = "none"  # 'none' (FSDP gather, baseline) | 'data'
     #                       (weight-stationary EP: experts sharded over the
@@ -467,6 +473,15 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, gcfg: GSPMDConfig,
             "comm='hier' shards parameters over a (node, device) 2D mesh — "
             "set ShardingRules(data=('node', 'device')) (or any 2-axis "
             f"tuple); got data={rules.data!r}")
+    if comm_backend.name.startswith("pipe") and len(da) < 2:
+        raise ValueError(
+            "comm='pipe' stage-partitions the layer stack over a "
+            "(pipe, data) 2D mesh — set ShardingRules(data=('pipe', "
+            f"'data')) (or any 2-axis tuple); got data={rules.data!r}")
+    if comm_backend.name.startswith("pipe"):
+        pipe_stages = gcfg.pipe_stages or mesh.shape[da[0]]
+    else:
+        pipe_stages = 1
     manual = tuple(da) + ((rules.pod,) if rules.pod else ())
     ep = _moe_expert_parallel(cfg.num_experts, mesh, rules.model)
 
@@ -638,6 +653,8 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, gcfg: GSPMDConfig,
         pxform=pxform,
         prefetch=pxform_overlap,
         checkpoint_minibatch=True,
+        pipe_stages=pipe_stages,
+        pipe_interleave=gcfg.pipe_interleave,
     )
 
     def grad_minibatch(params_local, batch_local):

@@ -17,6 +17,12 @@ from repro.kernels.odc_scatter import (
     odc_scatter_accumulate_layers_pallas,
     odc_scatter_accumulate_pallas,
 )
+from repro.kernels.quant import (
+    dequantize_pallas,
+    odc_gather_q8_pallas,
+    odc_scatter_accumulate_q8_pallas,
+    quantize_pallas,
+)
 from repro.kernels.ssd_scan import ssd_scan_pallas
 
 
@@ -70,6 +76,74 @@ def odc_scatter_accumulate_layers(y_stacked, axis_name: str, *,
     stacked = y_stacked.reshape((L, n, c) + y_stacked.shape[2:])
     return odc_scatter_accumulate_layers_pallas(stacked, axis_name=axis_name,
                                                 interpret=interpret)
+
+
+def _chunk_blocks(x, chunk):
+    """Flatten + zero-pad to the (n_chunks, chunk) codec layout."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    pad = (-flat.shape[0]) % chunk
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, chunk)
+
+
+def quantize_int8(x, *, interpret=None):
+    """Chunked-int8 encode (Pallas codec kernel): any-shape tensor ->
+    ((n_chunks, chunk) int8 values, (n_chunks, 1) f32 scales) — the wire
+    format of ``repro.core.odc.quantize_chunked`` (its jnp oracle)."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    from repro.core.odc import INT8_CHUNK
+    return quantize_pallas(_chunk_blocks(x, INT8_CHUNK), interpret=interpret)
+
+
+def dequantize_int8(q, scales, shape, dtype=jnp.float32, *, interpret=None):
+    """Invert :func:`quantize_int8` back to a tensor of ``shape``."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    flat = dequantize_pallas(q, scales, interpret=interpret).reshape(-1)
+    size = 1
+    for s in shape:
+        size *= s
+    return flat[:size].reshape(shape).astype(dtype)
+
+
+def odc_gather_q8(x_shard, axis_name: str, *, interpret=None):
+    """Inside shard_map: (c, ...) local shard -> (n*c, ...) full tensor
+    with the ring payload chunked-int8 compressed — quantized ONCE at each
+    shard's origin (error does not compound with ring distance); the local
+    shard lands exactly."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    from repro import compat
+    n = compat.axis_size(axis_name)
+    me = jax.lax.axis_index(axis_name)
+    q, scales = quantize_int8(x_shard, interpret=interpret)
+    qs, ss = odc_gather_q8_pallas(q, scales, axis_name=axis_name,
+                                  interpret=interpret)
+    size = x_shard.size
+    flat = (qs.astype(jnp.float32) * ss).reshape(n, -1)[:, :size]
+    shards = flat.reshape((n,) + x_shard.shape).astype(x_shard.dtype)
+    shards = jax.lax.dynamic_update_index_in_dim(
+        shards, x_shard.astype(shards.dtype), me, 0)
+    return shards.reshape((n * x_shard.shape[0],) + x_shard.shape[1:])
+
+
+def odc_scatter_accumulate_q8(y, axis_name: str, *, interpret=None):
+    """Inside shard_map: (n*c, ...) local contribution -> (c, ...) owned,
+    fully-accumulated chunk, with every hop's outgoing partial sum
+    requantized to the chunked-int8 wire format."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    from repro import compat
+    from repro.core.odc import INT8_CHUNK
+    n = compat.axis_size(axis_name)
+    c = y.shape[0] // n
+    flat = y.reshape(n, -1).astype(jnp.float32)
+    pad = (-flat.shape[1]) % INT8_CHUNK
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    blocks = flat.reshape(n, -1, INT8_CHUNK)
+    out = odc_scatter_accumulate_q8_pallas(blocks, axis_name=axis_name,
+                                           interpret=interpret)
+    csize = y.size // n
+    return out.reshape(-1)[:csize].reshape((c,) + y.shape[1:]).astype(y.dtype)
 
 
 def gather_matmul(x, w_shard, axis_name: str, *, interpret=None):

@@ -1,0 +1,273 @@
+"""Chunked-int8 wire codec + compressed (q8) ring kernels (TPU Pallas).
+
+The ``pipe-int8`` backend moves stage-boundary activations/grads and
+posttrain weight pushes over a compressed wire: each 256-value chunk is
+encoded as int8 values plus one f32 scale (``absmax / 127``), shrinking
+wire bytes per value from 4 to ``1 + 4/256``.  This module carries the
+hardware realization:
+
+  quantize / dequantize       whole-block VMEM codec kernels (the wire
+                              format of ``repro.core.odc.quantize_chunked``)
+  odc_gather_q8_pallas        the ring gather of ``odc_gather.py`` with the
+                              payload quantized ONCE at its source and the
+                              (values, scales) pair relayed verbatim hop to
+                              hop — error does not compound with distance
+  odc_scatter_accumulate_q8_pallas
+                              the scatter-accumulate ring with each hop's
+                              outgoing partial sum requantized (a
+                              reduce-scatter must send partials, so error
+                              compounds at most n-1 hops)
+
+Same staging discipline as the fp32 rings: HBM refs (``pl.ANY``), two-slot
+VMEM double buffers, one-sided ``make_async_remote_copy`` per payload
+stream (values and scales ride separate DMAs sharing one credit), and
+credit backpressure only on real TPU.  The jnp q8 primitives in
+``repro.core.odc`` are the numerical oracles — same formula, same hop
+order, so interpret-mode results are bit-identical.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro import compat
+
+
+# ===========================================================================
+# codec kernels: (n_chunks, chunk) f32  <->  int8 values + per-chunk scales
+# ===========================================================================
+def _quantize_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...]
+    absmax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    scales = jnp.where(absmax > 0.0, absmax / 127.0, 1.0)
+    q_ref[...] = jnp.clip(jnp.round(x / scales), -127.0, 127.0
+                          ).astype(jnp.int8)
+    s_ref[...] = scales
+
+
+def quantize_pallas(blocks, *, interpret: bool = True):
+    """(n_chunks, chunk) f32 -> ((n_chunks, chunk) int8, (n_chunks, 1) f32
+    scales); an all-zero chunk gets scale 1.0 so zeros round-trip exactly."""
+    nc, chunk = blocks.shape
+    return pl.pallas_call(
+        _quantize_kernel,
+        out_shape=(jax.ShapeDtypeStruct((nc, chunk), jnp.int8),
+                   jax.ShapeDtypeStruct((nc, 1), jnp.float32)),
+        interpret=compat.interpret_params(interpret),
+    )(blocks.astype(jnp.float32))
+
+
+def _dequantize_kernel(q_ref, s_ref, out_ref):
+    out_ref[...] = q_ref[...].astype(jnp.float32) * s_ref[...]
+
+
+def dequantize_pallas(q, scales, *, interpret: bool = True):
+    """((n_chunks, chunk) int8, (n_chunks, 1) f32) -> (n_chunks, chunk) f32."""
+    return pl.pallas_call(
+        _dequantize_kernel,
+        out_shape=jax.ShapeDtypeStruct(q.shape, jnp.float32),
+        interpret=compat.interpret_params(interpret),
+    )(q, scales)
+
+
+# ===========================================================================
+# compressed ring gather: quantize once at source, relay (q, scales) verbatim
+# ===========================================================================
+def _gather_q8_kernel(q_ref, s_ref, qout_ref, sout_ref, qbuf_ref, sbuf_ref,
+                      qsend_sem, qrecv_sem, ssend_sem, srecv_sem, credit_sem,
+                      copy_sem, *, num, axis_name, with_credits):
+    me = jax.lax.axis_index(axis_name)
+    dev_right, dev_type = compat.remote_device_id(jax.lax.rem(me + 1, num))
+    left = jax.lax.rem(me - 1 + num, num)
+
+    # my own encoding: into my output slot and the first staging slot
+    compat.sync_copy(q_ref, qout_ref.at[me], copy_sem)
+    compat.sync_copy(s_ref, sout_ref.at[me], copy_sem)
+    compat.sync_copy(q_ref, qbuf_ref.at[0], copy_sem)
+    compat.sync_copy(s_ref, sbuf_ref.at[0], copy_sem)
+
+    def hop(i, _):
+        slot = jax.lax.rem(i, 2)
+        nxt = jax.lax.rem(i + 1, 2)
+
+        if with_credits:
+            @pl.when(i >= 2)
+            def _backpressure():  # one credit covers both payload streams
+                pltpu.semaphore_wait(credit_sem, 1)
+
+        q_rdma = pltpu.make_async_remote_copy(
+            src_ref=qbuf_ref.at[slot],
+            dst_ref=qbuf_ref.at[nxt],
+            send_sem=qsend_sem.at[slot],
+            recv_sem=qrecv_sem.at[nxt],
+            device_id=dev_right,
+            device_id_type=dev_type,
+        )
+        s_rdma = pltpu.make_async_remote_copy(
+            src_ref=sbuf_ref.at[slot],
+            dst_ref=sbuf_ref.at[nxt],
+            send_sem=ssend_sem.at[slot],
+            recv_sem=srecv_sem.at[nxt],
+            device_id=dev_right,
+            device_id_type=dev_type,
+        )
+        q_rdma.start()
+        s_rdma.start()
+        q_rdma.wait()
+        s_rdma.wait()
+        src = jax.lax.rem(me - i - 1 + num, num)  # who encoded this shard
+        compat.sync_copy(qbuf_ref.at[nxt], qout_ref.at[src], copy_sem)
+        compat.sync_copy(sbuf_ref.at[nxt], sout_ref.at[src], copy_sem)
+
+        if with_credits:
+            @pl.when(i <= num - 4)
+            def _credit():  # both slot buffers reusable by the left neighbor
+                pltpu.semaphore_signal(credit_sem, 1, device_id=left,
+                                       device_id_type=dev_type)
+
+        return 0
+
+    jax.lax.fori_loop(0, num - 1, hop, 0)
+
+
+def odc_gather_q8_pallas(q, scales, *, axis_name: str,
+                         interpret: bool = True):
+    """(q, scales): the local shard's chunked-int8 encoding inside
+    shard_map -> ((n, n_chunks, chunk) int8, (n, n_chunks, 1) f32): every
+    device's encoding, each quantized once at its origin (the caller
+    dequantizes, and may overwrite its own slot with the exact shard)."""
+    n = compat.axis_size(axis_name)
+    nc, chunk = q.shape
+    kernel = functools.partial(
+        _gather_q8_kernel, num=n, axis_name=axis_name,
+        with_credits=compat.supports_remote_semaphore_signal(interpret))
+    return pl.pallas_call(
+        kernel,
+        out_shape=(jax.ShapeDtypeStruct((n, nc, chunk), jnp.int8),
+                   jax.ShapeDtypeStruct((n, nc, 1), jnp.float32)),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY),
+                  pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=[pl.BlockSpec(memory_space=pl.ANY),
+                   pl.BlockSpec(memory_space=pl.ANY)],
+        scratch_shapes=[
+            pltpu.VMEM((2, nc, chunk), jnp.int8),
+            pltpu.VMEM((2, nc, 1), jnp.float32),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.REGULAR,
+            pltpu.SemaphoreType.DMA,
+        ],
+        compiler_params=compat.tpu_compiler_params(collective_id=2),
+        interpret=compat.interpret_params(interpret),
+    )(q, scales)
+
+
+# ===========================================================================
+# compressed scatter-accumulate: requantize the partial sum at every hop
+# ===========================================================================
+def _scatter_q8_kernel(x_ref, out_ref, acc_ref, qsnd_ref, ssnd_ref,
+                       qstage_ref, sstage_ref, qsend_sem, qrecv_sem,
+                       ssend_sem, srecv_sem, credit_sem, copy_sem, *, num,
+                       axis_name, with_credits):
+    me = jax.lax.axis_index(axis_name)
+    dev_right, dev_type = compat.remote_device_id(jax.lax.rem(me + 1, num))
+    left = jax.lax.rem(me - 1 + num, num)
+
+    # start with my contribution for the chunk owned by my left neighbor
+    first = jax.lax.rem(me - 1 + num, num)
+    compat.sync_copy(x_ref.at[first], acc_ref, copy_sem)
+
+    def hop(h, _):
+        slot = jax.lax.rem(h, 2)
+
+        # the wire payload is the chunked-int8 encoding of the outgoing
+        # partial sum (the previous hop's rdma.wait() freed the send bufs)
+        acc = acc_ref[...]
+        absmax = jnp.max(jnp.abs(acc), axis=1, keepdims=True)
+        scales = jnp.where(absmax > 0.0, absmax / 127.0, 1.0)
+        qsnd_ref[...] = jnp.clip(jnp.round(acc / scales), -127.0, 127.0
+                                 ).astype(jnp.int8)
+        ssnd_ref[...] = scales
+
+        if with_credits:
+            @pl.when(h >= 3)  # two staging slots = two hops of slack
+            def _backpressure():
+                pltpu.semaphore_wait(credit_sem, 1)
+
+        q_rdma = pltpu.make_async_remote_copy(
+            src_ref=qsnd_ref,
+            dst_ref=qstage_ref.at[slot],
+            send_sem=qsend_sem.at[slot],
+            recv_sem=qrecv_sem.at[slot],
+            device_id=dev_right,
+            device_id_type=dev_type,
+        )
+        s_rdma = pltpu.make_async_remote_copy(
+            src_ref=ssnd_ref,
+            dst_ref=sstage_ref.at[slot],
+            send_sem=ssend_sem.at[slot],
+            recv_sem=srecv_sem.at[slot],
+            device_id=dev_right,
+            device_id_type=dev_type,
+        )
+        q_rdma.start()
+        s_rdma.start()
+        q_rdma.wait()
+        s_rdma.wait()
+        # owner-side accumulate: dequantize the arrived partial and add my
+        # own contribution for the chunk that just arrived
+        chunk = jax.lax.rem(me - 1 - h + num, num)
+        compat.sync_copy(x_ref.at[chunk], acc_ref, copy_sem)
+        acc_ref[...] = acc_ref[...] + (
+            qstage_ref[slot].astype(jnp.float32) * sstage_ref[slot])
+
+        if with_credits:
+            @pl.when(h <= num - 3)
+            def _credit():  # stage[slot] consumed — left may overwrite it
+                pltpu.semaphore_signal(credit_sem, 1, device_id=left,
+                                       device_id_type=dev_type)
+
+        return 0
+
+    jax.lax.fori_loop(1, num, hop, 0, unroll=False)
+    compat.sync_copy(acc_ref, out_ref, copy_sem)
+
+
+def odc_scatter_accumulate_q8_pallas(blocks, *, axis_name: str,
+                                     interpret: bool = True):
+    """blocks: per-destination contributions (n, n_chunks, chunk) f32
+    inside shard_map -> (n_chunks, chunk) f32: the accumulated sum of
+    chunk ``me`` over all devices, every hop's wire traffic int8."""
+    n = compat.axis_size(axis_name)
+    assert blocks.shape[0] == n, (blocks.shape, n)
+    nc, chunk = blocks.shape[1:]
+    kernel = functools.partial(
+        _scatter_q8_kernel, num=n, axis_name=axis_name,
+        with_credits=compat.supports_remote_semaphore_signal(interpret))
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((nc, chunk), jnp.float32),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=pl.BlockSpec(memory_space=pl.ANY),
+        scratch_shapes=[
+            pltpu.VMEM((nc, chunk), jnp.float32),
+            pltpu.VMEM((nc, chunk), jnp.int8),
+            pltpu.VMEM((nc, 1), jnp.float32),
+            pltpu.VMEM((2, nc, chunk), jnp.int8),
+            pltpu.VMEM((2, nc, 1), jnp.float32),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.REGULAR,
+            pltpu.SemaphoreType.DMA,
+        ],
+        compiler_params=compat.tpu_compiler_params(collective_id=3),
+        interpret=compat.interpret_params(interpret),
+    )(blocks.astype(jnp.float32))

@@ -56,3 +56,28 @@ def make_hier_mesh(nodes: int = 2, device: int = 0, model: int = 1):
                          f"devices, only {n} available")
     devs = np.asarray(jax.devices()[: int(np.prod(shape))]).reshape(shape)
     return Mesh(devs, ("node", "device", "model"))
+
+
+def make_pipe_mesh(stages: int = 2, data: int = 0, model: int = 1):
+    """A (pipe, data, model) mesh over local devices — the stage-partitioned
+    layout for the ``pipe`` / ``pipe-int8`` comm backends
+    (``ShardingRules(data=('pipe', 'data'))``): the layer stack is cut into
+    ``stages`` contiguous slabs along the leading axis, parameters are
+    FSDP-sharded over both axes, intra-stage gathers are collective and
+    stage-boundary traffic rides the p2p ring transport.
+
+    data=0 consumes all remaining devices on the intra-stage axis."""
+    n = jax.device_count()
+    if data == 0:
+        if stages * model <= 0 or n % (stages * model) or n < stages * model:
+            raise ValueError(
+                f"stages*model ({stages}*{model}) must evenly divide the "
+                f"device count ({n}) — every stage needs the same number of "
+                f"devices and at least one")
+        data = n // (stages * model)
+    shape = (stages, data, model)
+    if int(np.prod(shape)) > n:
+        raise ValueError(f"pipe mesh {shape} needs {int(np.prod(shape))} "
+                         f"devices, only {n} available")
+    devs = np.asarray(jax.devices()[: int(np.prod(shape))]).reshape(shape)
+    return Mesh(devs, ("pipe", "data", "model"))

@@ -32,7 +32,8 @@ from repro.balance.cost import CostModel
 from repro.configs import get_config, get_reduced
 from repro.core import backend as backends
 from repro.core.gspmd import GSPMDConfig, ShardingRules, make_train_step
-from repro.launch.mesh import make_hier_mesh, make_host_mesh
+from repro.launch.mesh import (make_hier_mesh, make_host_mesh,
+                               make_pipe_mesh)
 from repro.models import transformer as T
 from repro.optim import AdamWConfig, adamw_init
 from repro.posttrain import (
@@ -66,6 +67,9 @@ def main(argv=None):
     ap.add_argument("--nodes", type=int, default=2,
                     help="with --comm hier: node count of the two-tier "
                          "FSDP mesh")
+    ap.add_argument("--pipe-stages", type=int, default=2,
+                    help="with --comm pipe/pipe-int8: stage count of the "
+                         "(pipe, data, model) mesh")
     ap.add_argument("--rollout", default="synthetic",
                     choices=("synthetic", "engine", "continuous"),
                     help="grpo only: 'engine' decodes real rollouts with "
@@ -113,12 +117,22 @@ def main(argv=None):
         mesh = make_hier_mesh(nodes=args.nodes, model=args.model_axis)
         rules = ShardingRules(data=("node", "device"))
         world = mesh.shape["node"] * mesh.shape["device"]
+    elif comm.name.startswith("pipe"):
+        # 1F1B stage pipeline, as in launch.train; the weight push rides
+        # the same two-tier wire (int8-compressed for pipe-int8)
+        mesh = make_pipe_mesh(stages=args.pipe_stages,
+                              model=args.model_axis)
+        rules = ShardingRules(data=("pipe", "data"))
+        world = mesh.shape["pipe"] * mesh.shape["data"]
     else:
         mesh = make_host_mesh(model=args.model_axis)
         rules = ShardingRules()
         world = mesh.shape["data"]
     gcfg = GSPMDConfig(rules=rules, schedule=args.schedule,
-                       comm=comm.name, block_kv=min(128, args.max_tokens))
+                       comm=comm.name, block_kv=min(128, args.max_tokens),
+                       pipe_stages=(args.pipe_stages
+                                    if comm.name.startswith("pipe")
+                                    else 0))
     print(f"[posttrain] {cfg.name} task={args.task} mesh={dict(mesh.shape)} "
           f"staleness={args.staleness} comm={comm.name} "
           f"strategy={args.strategy} rollout="

@@ -71,10 +71,11 @@ def _serve_continuous(cfg, mesh, gcfg, params, args, key):
           f"{engine.allocator.block_size} positions, all freed: "
           f"{engine.allocator.free_blocks == engine.allocator.num_blocks}")
     by_rid = {c.rid: c for c in done}
-    first = by_rid[0]
-    print(f"[serve] req 0: {len(first.generated)} tokens "
-          f"(weights v{first.weight_version}, {first.finish_reason}) "
-          f"ids: {first.generated[:16].tolist()}")
+    first = by_rid.get(0)
+    if first is not None:  # --requests 0: nothing was admitted or decoded
+        print(f"[serve] req 0: {len(first.generated)} tokens "
+              f"(weights v{first.weight_version}, {first.finish_reason}) "
+              f"ids: {first.generated[:16].tolist()}")
     if rec is not None:
         print(f"[serve] wrote per-slot trace {rec.write(args.trace)}")
     return 0

@@ -33,7 +33,7 @@ from repro.data.loader import SyntheticSFTLoader
 from repro.data.packing import build_minibatch  # noqa: F401 (re-export:
 #   the plan->batch assembly now lives in repro.data.packing, shared with
 #   the posttrain pipeline and the GRPO example)
-from repro.launch.mesh import make_hier_mesh, make_host_mesh
+from repro.launch.mesh import make_hier_mesh, make_host_mesh, make_pipe_mesh
 from repro.models import transformer as T
 from repro.optim import AdamWConfig, adamw_init
 from repro.sim.trace import TraceRecorder, maybe_span
@@ -64,12 +64,22 @@ def main(argv=None):
                          "AG/RS), 'odc' (p2p ring), 'odc-overlap' (odc + "
                          "implied overlap schedule), 'hier' (intra-node "
                          "collective + inter-node ring over a node×device "
-                         "mesh, see --nodes); legacy aliases (e.g. the "
-                         "sim's 'overlap') resolve to the same backends")
+                         "mesh, see --nodes); 'pipe'/'pipe-int8' (1F1B "
+                         "stage pipeline over a pipe×data mesh, see "
+                         "--pipe-stages; -int8 compresses stage-boundary "
+                         "traffic to chunked int8); legacy aliases (e.g. "
+                         "the sim's 'overlap') resolve to the same backends")
     ap.add_argument("--nodes", type=int, default=2,
                     help="with --comm hier: node count of the (node, "
                          "device, model) mesh (devices per node = "
                          "device_count / nodes / model)")
+    ap.add_argument("--pipe-stages", type=int, default=2,
+                    help="with --comm pipe/pipe-int8: stage count of the "
+                         "(pipe, data, model) mesh (devices per stage = "
+                         "device_count / stages / model)")
+    ap.add_argument("--pipe-interleave", action="store_true",
+                    help="with --comm pipe/pipe-int8: interleaved 1F1B "
+                         "(halved warmup depth)")
     ap.add_argument("--device-profile", default="none",
                     choices=("none", "homogeneous", "one_slow", "bimodal",
                              "uniform"),
@@ -119,6 +129,11 @@ def main(argv=None):
         mesh = make_hier_mesh(nodes=args.nodes, model=args.model_axis)
         rules = ShardingRules(data=("node", "device"))
         world = mesh.shape["node"] * mesh.shape["device"]
+    elif comm.name.startswith("pipe"):
+        # 1F1B stage pipeline: params sharded stage-major over (pipe, data)
+        mesh = make_pipe_mesh(stages=args.pipe_stages, model=args.model_axis)
+        rules = ShardingRules(data=("pipe", "data"))
+        world = mesh.shape["pipe"] * mesh.shape["data"]
     else:
         mesh = make_host_mesh(data=args.data_axis, model=args.model_axis)
         rules = ShardingRules()
@@ -139,6 +154,9 @@ def main(argv=None):
     gcfg = GSPMDConfig(
         rules=rules, schedule=args.schedule, comm=comm.name,
         block_kv=min(512, args.max_tokens), device_profile=profile,
+        pipe_stages=(args.pipe_stages
+                     if comm.name.startswith("pipe") else 0),
+        pipe_interleave=args.pipe_interleave,
     )
     lr_schedule = None
     if args.cosine or args.warmup_steps:

@@ -66,8 +66,14 @@ class RolloutBuffer:
         A ``Rollout``'s own ``version`` tag is trusted; passing a
         conflicting wave-level ``version`` is an error (one source of
         truth for the staleness accounting).  Raw token arrays are
-        wrapped and need the ``version`` argument."""
-        for r in rollouts:
+        wrapped and need the ``version`` argument.
+
+        The whole batch is validated BEFORE anything is enqueued — like
+        ``pop``, a rejected ``put`` must leave the queue intact so the
+        caller can fix the wave and retry without half of it already
+        dispatched to the trainer."""
+        wrapped = []
+        for i, r in enumerate(rollouts):
             if not isinstance(r, Rollout):
                 if version is None:
                     raise ValueError("raw rollouts need a weight version")
@@ -75,8 +81,10 @@ class RolloutBuffer:
                             version=version)
             elif version is not None and r.version != version:
                 raise ValueError(
-                    f"rollout #{self._arrivals} tagged version {r.version} "
-                    f"conflicts with put(version={version})")
+                    f"rollout #{self._arrivals + i} tagged version "
+                    f"{r.version} conflicts with put(version={version})")
+            wrapped.append(r)
+        for r in wrapped:
             r.seq = self._arrivals
             self._arrivals += 1
             self._q.append(r)

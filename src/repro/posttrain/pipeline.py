@@ -137,7 +137,8 @@ class PostTrainPipeline:
                 "loss": loss,
                 "tokens": float(m["tokens"]),
                 "rollouts": len(rollouts),
-                "staleness": max(t - r.version for r in rollouts),
+                "staleness": max((t - r.version for r in rollouts),
+                                 default=0),  # empty wave (wave_size 0)
                 "microbatches": [len(d) for d in plan.assignments],
                 "dt": time.time() - t0,
                 "pushes": self.pusher.pushes if self.pusher else 0,

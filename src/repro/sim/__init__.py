@@ -16,12 +16,15 @@ from repro.sim.timeline import (  # noqa: F401
     EVENT_KINDS,
     INDEPENDENT,
     LOCKSTEP,
+    PIPE_1F1B,
     PIPELINED,
     POLICIES,
     Event,
     SchedulingPolicy,
     Timeline,
     get_policy,
+    instructions_1f1b,
+    stage_partition,
 )
 from repro.sim.trace import (  # noqa: F401
     TraceRecorder,

@@ -97,6 +97,23 @@ class Lane:
         self._edge = start
         self.events.append(Event(kind, start, duration, name))
 
+    def mark(self, kind: str, name: str = "",
+             at: Optional[float] = None):
+        """An explicit zero-duration *instant* marker at ``at`` (default:
+        the cursor).  Unlike the derived sub-segments — whose zero-width
+        entries are arithmetic artifacts and are dropped by ``_emit`` — a
+        marker is deliberate (a gate that cleared instantly, a push that
+        took less than one timer tick) and is kept, serialized as a
+        Chrome-trace instant event (``"ph": "i"``) so viewers render it
+        instead of dropping an invisible zero-width box."""
+        if kind not in EVENT_KINDS:
+            raise ValueError(f"unknown event kind {kind!r}; "
+                             f"one of {EVENT_KINDS}")
+        start = self.t if at is None else at
+        start = max(start, self._edge)
+        self._edge = start
+        self.events.append(Event(kind, start, 0.0, name))
+
     def wait(self, until: float, kind: str = "barrier", name: str = ""):
         """Advance the cursor to ``max(t, until)``, recording the gap."""
         if until > self.t:
@@ -123,9 +140,15 @@ class Lane:
     def place(self, start: float, duration: float, kind: str,
               name: str = ""):
         """Absolute placement (annotation lanes, real-run recorders);
-        bumps the cursor to the event end so makespans stay meaningful."""
-        self._emit(start, duration, kind, name)
-        self.t = max(self.t, start + duration)
+        bumps the cursor to the event end so makespans stay meaningful.
+        A zero-duration placement — a real-run span shorter than one
+        timer tick — is kept as an instant marker rather than silently
+        dropped."""
+        if duration <= 0.0:
+            self.mark(kind, name, at=start)
+        else:
+            self._emit(start, duration, kind, name)
+        self.t = max(self.t, start + max(duration, 0.0))
 
     def kind_totals(self) -> Dict[str, float]:
         out = {k: 0.0 for k in EVENT_KINDS}
@@ -297,12 +320,146 @@ class LockstepPolicy(SchedulingPolicy):
         return makespan, [(makespan, s) for s in segs]
 
 
+def stage_partition(num_layers: int, stages: int) -> List[int]:
+    """Contiguous per-stage layer counts: ``num_layers`` split into
+    ``stages`` chunks with the remainder going to the earliest stages (the
+    standard pipeline partition).  Stages beyond the layer count get zero
+    layers — they still relay activations, they just do no compute."""
+    if stages <= 0:
+        raise ValueError(f"stages must be positive, got {stages}")
+    if num_layers < 0:
+        raise ValueError(f"num_layers must be >= 0, got {num_layers}")
+    base, rem = divmod(num_layers, stages)
+    return [base + (1 if s < rem else 0) for s in range(stages)]
+
+
+def instructions_1f1b(num_microbatches: int, stages: int, *, stage: int = 0,
+                      interleave: bool = False) -> List[Tuple[str, int]]:
+    """The 1F1B issue order at one pipeline stage: ``[("F", j) | ("B", j)]``.
+
+    Stage ``s`` of ``S`` runs ``S - 1 - s`` warmup forwards (filling the
+    pipeline), then strict one-forward-one-backward alternation (bounding
+    in-flight activations at the warmup depth + 1), then drains the
+    remaining backwards.  ``interleave=True`` halves the warmup depth —
+    the reduced-residency interleaved variant, where each stage holds two
+    half-size virtual stages so its fill obligation is split.
+
+    This function is the ONE definition of the issue order: the sim's
+    :class:`PipelineStagePolicy` schedules per-stage lanes from it and the
+    executable ``schedule='1f1b'`` gradient loop
+    (``repro.core.backend.build_schedule_grad``) issues its microbatch
+    forward/backward calls from the same list, so executable and simulated
+    pipelines share their schedule shape by construction.
+    """
+    M, S = num_microbatches, stages
+    if S <= 0:
+        raise ValueError(f"stages must be positive, got {S}")
+    if not 0 <= stage < S:
+        raise ValueError(f"stage {stage} out of range for {S} stages")
+    if M < 0:
+        raise ValueError(f"num_microbatches must be >= 0, got {M}")
+    w = S - 1 - stage
+    if interleave:
+        w = (w + 1) // 2
+    w = min(w, M)
+    out: List[Tuple[str, int]] = [("F", j) for j in range(w)]
+    for j in range(M - w):
+        out.append(("F", w + j))
+        out.append(("B", j))
+    out.extend(("B", j) for j in range(M - w, M))
+    return out
+
+
+class PipelineStagePolicy(SchedulingPolicy):
+    """Stage-partitioned 1F1B pipeline: the lanes are pipeline *stages*,
+    not data-parallel replicas.  The minibatch's microbatches — every
+    device's list, concatenated in device order — form one stream that
+    flows through all lanes; lane ``s`` runs ``stage_partition(L, S)[s]``
+    of the ``L`` layers, paying 1/3 of its per-microbatch share forward
+    and 2/3 backward (the classic 2× backward flop ratio), and each
+    stage-boundary crossing costs the sender its per-message wire time
+    ``cl[s]`` (the pipe backend's ``layer_comm_time``: one activation- or
+    gradient-sized p2p send).
+
+    Placement is dependency-driven: stage ``s`` issues in its
+    ``instructions_1f1b`` order, each forward gated on the upstream
+    forward's send and each backward on the downstream backward's send;
+    gaps are recorded as ``barrier`` segments (the pipeline bubble).  All
+    lanes share the step makespan as their block duration (the
+    minibatch-end optimizer barrier joins every stage), so drain time is
+    attributed explicitly.
+    """
+
+    name = "1f1b"
+
+    def step_blocks(self, times, cl, L):
+        S = len(times)
+        if S == 0:
+            return 0.0, []
+        stream = [t for ts in times for t in ts]
+        M = len(stream)
+        denom = max(L, 1)
+        share = [c / denom for c in stage_partition(denom, S)]
+        orders = [instructions_1f1b(M, S, stage=s) for s in range(S)]
+
+        # completion (incl. the boundary send) of F/B for mb j at stage s
+        f_done = [[None] * M for _ in range(S)]
+        b_done = [[None] * M for _ in range(S)]
+        ptr = [0] * S
+        cursor = [0.0] * S
+        segs: List[list] = [[] for _ in range(S)]
+
+        progressed = True
+        while progressed:
+            progressed = False
+            for s in range(S):
+                while ptr[s] < len(orders[s]):
+                    op, j = orders[s][ptr[s]]
+                    if op == "F":
+                        ready = 0.0 if s == 0 else f_done[s - 1][j]
+                        dur = stream[j] * share[s] / 3.0
+                        send = cl[s] if s < S - 1 else 0.0
+                    else:
+                        ready = 0.0 if s == S - 1 else b_done[s + 1][j]
+                        dur = 2.0 * stream[j] * share[s] / 3.0
+                        send = cl[s] if s > 0 else 0.0
+                    if ready is None:
+                        break  # upstream/downstream not scheduled yet
+                    t = cursor[s]
+                    if ready > t:
+                        segs[s].append(("barrier", ready - t,
+                                        f"bubble ({op} mb{j})"))
+                        t = ready
+                    segs[s].append(("compute", dur, f"{op} mb{j}"))
+                    t = t + dur
+                    if send > 0.0:
+                        segs[s].append(("comm", send, f"send {op} mb{j}"))
+                        t = t + send
+                    done = f_done if op == "F" else b_done
+                    done[s][j] = t
+                    cursor[s] = t
+                    ptr[s] += 1
+                    progressed = True
+        if any(ptr[s] < len(orders[s]) for s in range(S)):
+            raise RuntimeError("1F1B schedule deadlocked — "
+                               "inconsistent instruction streams")
+        makespan = max(cursor)
+        blocks = []
+        for s in range(S):
+            drain = makespan - cursor[s]
+            if drain > 0.0:
+                segs[s].append(("barrier", drain, "pipeline drain"))
+            blocks.append((makespan, segs[s]))
+        return makespan, blocks
+
+
 LOCKSTEP = LockstepPolicy()
 INDEPENDENT = IndependentPolicy()
 PIPELINED = PipelinedPolicy()
+PIPE_1F1B = PipelineStagePolicy()
 
 POLICIES: Dict[str, SchedulingPolicy] = {
-    p.name: p for p in (LOCKSTEP, INDEPENDENT, PIPELINED)
+    p.name: p for p in (LOCKSTEP, INDEPENDENT, PIPELINED, PIPE_1F1B)
 }
 
 

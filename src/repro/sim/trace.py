@@ -9,9 +9,13 @@ both render side by side in ``chrome://tracing`` or https://ui.perfetto.dev
 
 Layout: one process, one thread ("tid") per lane, complete events
 (``"ph": "X"``) with microsecond timestamps; the event kind rides in
-``cat`` (color grouping in the viewer) and ``args.kind``.  Run-level
-metadata — source ("sim" | "real"), scheme, policy, staleness — lands in
-``otherData``, and the per-lane idle attribution is precomputed into
+``cat`` (color grouping in the viewer) and ``args.kind``.  Zero-duration
+events — ``Lane.mark`` instants, or real-run spans shorter than one timer
+tick — are emitted as thread-scoped *instant* events (``"ph": "i"``,
+``"s": "t"``) instead of zero-width complete events, which Perfetto and
+chrome://tracing drop or render invisibly.  Run-level metadata — source
+("sim" | "real"), scheme, policy, staleness — lands in ``otherData``, and
+the per-lane idle attribution is precomputed into
 ``otherData.idle_attribution`` so a trace file is self-describing even
 without the viewer.
 """
@@ -36,6 +40,20 @@ def chrome_trace(timeline: Timeline, *, extra_meta: Optional[dict] = None
             "args": {"name": lane.name},
         })
         for ev in lane.events:
+            if ev.duration <= 0.0:
+                # viewers drop/hide dur-0 complete events; an instant
+                # ("ph": "i", thread scope) renders as a visible tick
+                events.append({
+                    "name": ev.name or ev.kind,
+                    "cat": ev.kind,
+                    "ph": "i",
+                    "s": "t",
+                    "ts": ev.start * 1e6,
+                    "pid": 0,
+                    "tid": tid,
+                    "args": {"kind": ev.kind},
+                })
+                continue
             events.append({
                 "name": ev.name or ev.kind,
                 "cat": ev.kind,
@@ -106,6 +124,11 @@ class TraceRecorder:
               name: str = ""):
         """Record an event from explicit relative timestamps."""
         self.timeline.lane(lane).place(start, duration, kind, name)
+
+    def instant(self, lane: str, kind: str, name: str = ""):
+        """Record a point-in-time marker (a version publish, a gate that
+        cleared instantly) — serialized as a Chrome-trace instant event."""
+        self.timeline.lane(lane).mark(kind, name, at=self.now())
 
     def write(self, path: str, *, extra_meta: Optional[dict] = None) -> str:
         return write_trace(path, self.timeline, extra_meta=extra_meta)

@@ -47,7 +47,8 @@ KEY = jax.random.PRNGKey(0)
 # registry resolution
 # ===========================================================================
 def test_registry_names_and_aliases():
-    assert B.backend_names() == ("collective", "hier", "odc", "odc-overlap")
+    assert B.backend_names() == ("collective", "hier", "odc", "odc-overlap",
+                             "pipe", "pipe-int8")
     assert "overlap" in B.backend_names(include_aliases=True)
     assert B.get_backend("overlap") is B.get_backend("odc-overlap")
     assert B.get_backend(B.ODC) is B.ODC  # instances pass through
@@ -61,6 +62,8 @@ def test_resolve_schedule_implication():
     assert B.resolve("odc-overlap", "minibatch") == (B.ODC_OVERLAP, "overlap")
     assert B.resolve("overlap", "layer") == (B.ODC_OVERLAP, "overlap")
     assert B.resolve("collective", "layer") == (B.COLLECTIVE, "layer")
+    assert B.resolve("pipe", "minibatch") == (B.PIPE, "1f1b")
+    assert B.resolve("pipe-int8", "layer") == (B.PIPE_INT8, "1f1b")
     with pytest.raises(ValueError, match="unknown schedule"):
         B.resolve("odc", "epoch")
 
@@ -77,6 +80,8 @@ def test_sim_discipline_vocabulary():
     assert B.ODC.discipline == "independent"
     assert B.ODC_OVERLAP.discipline == "pipelined"
     assert B.HIER.discipline == "independent"
+    assert B.PIPE.discipline == "1f1b"
+    assert B.PIPE_INT8.discipline == "1f1b"
 
 
 # ===========================================================================

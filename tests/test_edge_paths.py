@@ -1,0 +1,156 @@
+"""Edge-path regression sweep: empty batches, zero-duration events, and
+zero-request/zero-rollout driver paths.
+
+Each test pins a path that used to crash or silently corrupt state:
+
+  * ``RolloutBuffer.put`` enqueued one-by-one while validating, so a
+    mid-batch rejection left half the wave in the queue — it must
+    validate the WHOLE batch first (atomic put, like ``pop``);
+  * ``chrome_trace`` emitted zero-duration complete events ("ph": "X",
+    dur 0.0) which Perfetto and chrome://tracing drop — instants must be
+    emitted as thread-scoped instant events ("ph": "i");
+  * ``launch.serve --requests 0`` indexed ``by_rid[0]`` on an empty
+    result set (KeyError);
+  * the posttrain pipeline's staleness metric was ``max()`` over an
+    empty rollout list (ValueError on an empty wave), and
+    ``karmarkar_karp`` crashed on the empty cost list behind it;
+  * ``simulate_serve`` with zero arrivals (verified safe — regression
+    lock only).
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.posttrain.buffer import Rollout, RolloutBuffer
+from repro.sim import GenModel, SimConfig, Timeline, simulate_serve
+from repro.sim.trace import TraceRecorder, chrome_trace, read_trace, write_trace
+
+
+# ===========================================================================
+# RolloutBuffer.put is atomic
+# ===========================================================================
+def _mk(version, n=3):
+    return Rollout(tokens=np.arange(n, dtype=np.int32), advantage=None,
+                   version=version)
+
+
+def test_put_version_conflict_leaves_queue_untouched():
+    buf = RolloutBuffer(staleness=0)
+    with pytest.raises(ValueError, match="conflicts"):
+        buf.put([_mk(1), _mk(1), _mk(2)], version=1)  # 3rd item conflicts
+    assert len(buf) == 0  # nothing from the rejected wave was enqueued
+
+
+def test_put_raw_without_version_leaves_queue_untouched():
+    buf = RolloutBuffer(staleness=0)
+    buf.put([_mk(0), _mk(0)])
+    with pytest.raises(ValueError, match="weight version"):
+        buf.put([_mk(0), np.arange(4, dtype=np.int32)])  # raw needs version
+    assert len(buf) == 2  # the failed wave added nothing...
+    popped = buf.pop(2, train_step=0)
+    assert [r.seq for r in popped] == [0, 1]  # ...and burned no seq numbers
+
+
+def test_put_then_retry_preserves_fifo_and_seq():
+    buf = RolloutBuffer(staleness=1)
+    with pytest.raises(ValueError):
+        buf.put([_mk(1), _mk(0)], version=1)
+    buf.put([_mk(1), _mk(1)], version=1)  # corrected wave
+    assert [r.seq for r in buf.pop(2, train_step=1)] == [0, 1]
+
+
+# ===========================================================================
+# zero-duration events serialize as Chrome-trace instants
+# ===========================================================================
+def test_mark_emits_instant_not_zero_width_complete():
+    tl = Timeline(source="sim")
+    lane = tl.lane("trainer")
+    lane.place(0.0, 1.0, "compute", "step 0")
+    lane.mark("push", "v1 publish", at=1.5)
+    trace = chrome_trace(tl)
+    evs = [e for e in trace["traceEvents"] if e["ph"] in ("X", "i")]
+    # Perfetto drops dur-0 complete events: none may be emitted
+    assert all(e["dur"] > 0.0 for e in evs if e["ph"] == "X")
+    inst = [e for e in evs if e["ph"] == "i"]
+    assert len(inst) == 1
+    assert inst[0]["name"] == "v1 publish"
+    assert inst[0]["s"] == "t"  # thread-scoped
+    assert inst[0]["ts"] == pytest.approx(1.5e6)
+    assert "dur" not in inst[0]
+
+
+def test_place_routes_zero_duration_to_instant():
+    tl = Timeline(source="real")
+    tl.lane("gen").place(0.25, 0.0, "comm", "sub-tick span")
+    evs = chrome_trace(tl)["traceEvents"]
+    assert [e["ph"] for e in evs if e["ph"] in ("X", "i")] == ["i"]
+
+
+def test_recorder_instants_round_trip_through_file(tmp_path):
+    rec = TraceRecorder(meta={"driver": "test"})
+    rec.event("trainer", "compute", 0.0, 0.5, "step")
+    rec.instant("trainer", "push", "publish v3")
+    rec.event("gen", "comm", 0.1, 0.0, "tick")  # sub-timer-tick span
+    path = str(tmp_path / "trace.json")
+    write_trace(path, rec.timeline)
+    loaded = read_trace(path)
+    phases = sorted(e["ph"] for e in loaded["traceEvents"])
+    assert phases.count("i") == 2 and phases.count("X") == 1
+    for e in loaded["traceEvents"]:
+        if e["ph"] == "X":
+            assert e["dur"] > 0.0
+        if e["ph"] == "i":
+            assert "dur" not in e and e["s"] == "t"
+    json.dumps(loaded)  # schema stays JSON-serializable
+
+
+def test_timeline_makespan_unchanged_by_instants():
+    tl = Timeline(source="sim")
+    lane = tl.lane("d0")
+    lane.place(0.0, 2.0, "compute", "work")
+    before = tl.makespan
+    lane.mark("push", "marker")  # at the cursor
+    assert tl.makespan == before
+
+
+# ===========================================================================
+# zero-request / zero-rollout driver paths
+# ===========================================================================
+def test_serve_driver_zero_requests(capsys):
+    from repro.launch import serve as serve_mod
+
+    rc = serve_mod.main([
+        "--arch", "qwen-1.5b", "--reduced", "--continuous",
+        "--requests", "0", "--slots", "2", "--prompt-len", "8",
+        "--gen", "4",
+    ])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "0 requests" in out and "all freed: True" in out
+
+
+def test_posttrain_driver_empty_wave(capsys):
+    from repro.launch import posttrain as posttrain_mod
+
+    rc = posttrain_mod.main([
+        "--task", "grpo", "--reduced", "--iters", "1", "--staleness", "0",
+        "--rollout", "continuous", "--prompts", "0", "--group", "2",
+        "--rollout-max-len", "16", "--prompt-len", "8",
+    ])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "staleness=0" in out and "done" in out
+
+
+def test_simulate_serve_zero_arrivals():
+    for scheme in ("wave", "continuous"):
+        r = simulate_serve([], scheme=scheme, slots=4,
+                           cfg=SimConfig(), gen=GenModel())
+        assert r.makespan == 0.0
+        assert r.tokens == 0
+        assert r.throughput == 0.0

@@ -1,0 +1,131 @@
+"""Property tests for Karmarkar–Karp number partitioning (balance/kk.py).
+
+Every load-balancing strategy routes through ``karmarkar_karp``; these
+properties pin the invariants the strategies rely on:
+
+  * the returned partitions are a *partition*: every input index appears
+    in exactly one part, no index is invented or dropped;
+  * ``equal_size=True`` keeps per-part counts within 1 of each other
+    (the verl equal-count constraint the paper relaxes for LB-Mini);
+  * uniform costs balance perfectly: ``imbalance`` is 0 (to float eps)
+    whenever the count constraint allows equal sums;
+  * the empty input degenerates to k empty parts (an empty rollout wave
+    must still produce a schedulable, all-empty plan — the posttrain
+    ``--prompts 0`` path).
+
+The hypothesis versions shrink counterexamples when the library is
+available; a seeded random sweep asserts the same invariants without it.
+"""
+import random
+
+import pytest
+
+try:  # only the @given tests need hypothesis; the rest run without it
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.balance.kk import imbalance, karmarkar_karp, partition_sums
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+
+if HAVE_HYPOTHESIS:
+    SETTINGS = dict(max_examples=200, deadline=None)
+    COSTS = st.lists(st.floats(min_value=0.01, max_value=1e4,
+                               allow_nan=False, allow_infinity=False),
+                     min_size=0, max_size=48)
+else:  # pragma: no cover - placeholders so the module imports (the @given
+    #                        tests themselves are skipped via the mark)
+    SETTINGS = {}
+    COSTS = None
+
+    class _StrategyStub:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()
+
+    def given(**kw):
+        return lambda f: f
+
+    def settings(**kw):
+        return lambda f: f
+
+
+def _check_cover(costs, k, equal_size):
+    parts = karmarkar_karp(costs, k, equal_size=equal_size)
+    assert len(parts) == k
+    flat = sorted(i for p in parts for i in p)
+    assert flat == list(range(len(costs)))
+    return parts
+
+
+def _check_counts(costs, k):
+    parts = _check_cover(costs, k, True)
+    counts = sorted(len(p) for p in parts)
+    assert counts[-1] - counts[0] <= 1
+    if costs and len(costs) % k == 0:  # evenly divisible: counts EQUAL
+        assert counts[-1] == counts[0]
+
+
+def _check_uniform(cost, k, per):
+    costs = [cost] * (k * per)
+    parts = karmarkar_karp(costs, k, equal_size=True)
+    # equal counts of equal costs ⇒ equal sums; imbalance is 0 up to the
+    # float eps of the mean division
+    assert abs(imbalance(costs, parts)) < 1e-9
+    sums = partition_sums(costs, parts)
+    assert max(sums) == min(sums)
+
+
+@needs_hypothesis
+@settings(**SETTINGS)
+@given(costs=COSTS, k=st.integers(min_value=1, max_value=8),
+       equal_size=st.booleans())
+def test_partitions_cover_indices_exactly_once(costs, k, equal_size):
+    _check_cover(costs, k, equal_size)
+
+
+@needs_hypothesis
+@settings(**SETTINGS)
+@given(costs=COSTS, k=st.integers(min_value=1, max_value=8))
+def test_equal_size_counts_within_one(costs, k):
+    _check_counts(costs, k)
+
+
+@needs_hypothesis
+@settings(**SETTINGS)
+@given(cost=st.floats(min_value=0.5, max_value=100, allow_nan=False),
+       k=st.integers(min_value=1, max_value=8),
+       per=st.integers(min_value=1, max_value=6))
+def test_uniform_costs_balance_perfectly(cost, k, per):
+    _check_uniform(cost, k, per)
+
+
+def test_properties_random_sweep():
+    """The same three properties over a seeded random sweep — exercised
+    even where hypothesis is unavailable."""
+    rng = random.Random(0)
+    for _ in range(400):
+        n, k = rng.randint(0, 40), rng.randint(1, 8)
+        costs = [rng.uniform(0.01, 1e4) for _ in range(n)]
+        _check_cover(costs, k, rng.random() < 0.5)
+        _check_counts(costs, k)
+    for _ in range(100):
+        _check_uniform(rng.uniform(0.5, 100), rng.randint(1, 8),
+                       rng.randint(1, 6))
+
+
+def test_empty_input_returns_k_empty_parts():
+    for k in (1, 2, 5):
+        parts = karmarkar_karp([], k)
+        assert parts == [[] for _ in range(k)]
+        assert imbalance([], parts) == 0.0
+    with pytest.raises(ValueError):
+        karmarkar_karp([], 0)
+
+
+def test_single_partition_takes_everything():
+    assert karmarkar_karp([3.0, 1.0, 2.0], 1) == [[0, 1, 2]]
