@@ -1,0 +1,227 @@
+"""Context-parallel (``cp``) backend sweep: max-seqlen × cp-degree ×
+long-sequence skew.
+
+The ``cp`` backend's claim: when one sequence dominates a minibatch, no
+sample-level balancer can help — the sequence is atomic, and whichever
+device holds it is the straggler.  ``lb_token`` + the cp ring make the
+sequence divisible: its tokens are sequence-sharded over a ring group of
+``cp`` adjacent devices (head+tail interleaved chunks, so the causal
+unmasked area stays equal), turning one device's tail into a group-wide
+wave of cost/cp — at the price of ``L * (cp-1)`` KV ring hops per
+microbatch, which is what this sweep prices against the win.
+
+Grid: dataset × max sequence length × skew (the longest sample stretched
+to ``skew × median``) × {three non-cp baselines, lb_token+cp ring at
+cp ∈ {1, 2, 4}}.
+
+Acceptance targets (checked by ``validate``):
+  * in EVERY cell where one sequence is ≥ 4× the median, the best cp>1
+    configuration strictly beats the best non-cp backend;
+  * at cp=1 the ring degenerates: ``lb_token`` reproduces LB-Mini's
+    assignments and the ``context-ring`` policy charges a literal 0.0
+    hop term, so the makespan matches flat ODC within 5% (it is in fact
+    float-exact — the stricter bound is asserted);
+  * the modeled ring hop shrinks with cp (deeper ring, smaller chunks)
+    and is exactly 0.0 at cp=1;
+  * stretching the dominant sequence never speeds any scheme up.
+
+Writes ``benchmarks/BENCH_cp.json`` — a golden anchor: the CI ``cp``
+job asserts it regenerates byte-identical — plus one representative cp
+ring Chrome trace (``cp_sample_trace.json``).
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.balance import STRATEGIES
+from repro.balance.strategies import lb_token
+from repro.core import backend as B
+from repro.data import sample_lengths
+from repro.sim import CommModel, SimConfig, simulate_minibatch
+
+# shared constants with the other sweeps so cells stay comparable
+from benchmarks.sft_throughput import MAX_TOKENS, SEEDS, WORLD
+
+# 2 samples/device: a 4x-median sequence is then ~1.3x one device's
+# average load — a genuine straggler (at 4/device it would be only
+# ~0.7x, and splitting it buys nothing but ring hops)
+MINIBS = 2
+MAX_LENS = (2_048, 8_192, 32_768)
+SKEWS = (1.0, 4.0, 8.0)
+CP_DEGREES = (1, 2, 4)
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "BENCH_cp.json")
+SAMPLE_TRACE = os.path.join(os.path.dirname(__file__),
+                            "cp_sample_trace.json")
+
+#: the non-cp field the ring has to beat (same world, same budget)
+BASELINES = (
+    ("lb_mini", "odc"),
+    ("lb_mini", "odc-overlap"),
+    ("lb_micro", "collective"),
+)
+
+
+def _cell_lengths(ds, max_len, skew, seed):
+    """One minibatch's lengths with the longest sample stretched to
+    ``skew × median`` (capped at the token budget, so every non-cp
+    baseline stays memory-feasible and the comparison is fair)."""
+    lens = sample_lengths(ds, WORLD * MINIBS, seed, max_len=max_len)
+    lens = [int(min(l, MAX_TOKENS)) for l in lens]
+    med = float(np.median(lens))
+    j = int(np.argmax(lens))
+    lens[j] = int(min(max(lens[j], skew * med), MAX_TOKENS))
+    return lens
+
+
+def run(datasets=("longalign", "swesmith"), max_lens=MAX_LENS, skews=SKEWS,
+        cp_degrees=CP_DEGREES, seeds=SEEDS):
+    cm = CommModel()
+    cfg = SimConfig(overlap=0.0,  # fully-exposed comm, as in the other sweeps
+                    comm=cm)
+    cb = B.get_backend("cp")
+    rows = []
+    for ds in datasets:
+        for ml in max_lens:
+            for skew in skews:
+                ratios = []
+                for s in range(seeds):
+                    lens = _cell_lengths(ds, ml, skew, s)
+                    ratios.append(max(lens) / float(np.median(lens)))
+                cell = {"dataset": ds, "max_len": ml, "skew": skew,
+                        "dominant_ratio": float(min(ratios))}
+                for strat, scheme in BASELINES:
+                    mks, sps, br = [], [], []
+                    for s in range(seeds):
+                        lens = _cell_lengths(ds, ml, skew, s)
+                        plan = STRATEGIES[strat](lens, WORLD, MAX_TOKENS)
+                        r = simulate_minibatch(plan, lens, scheme=scheme,
+                                               cfg=cfg)
+                        mks.append(r.makespan)
+                        sps.append(len(lens) / r.makespan)
+                        br.append(r.bubble_rate)
+                    rows.append(dict(cell, cp=0, strategy=strat,
+                                     scheme=scheme,
+                                     makespan_s=float(np.mean(mks)),
+                                     samples_per_s=float(np.mean(sps)),
+                                     bubble_pct=100 * float(np.mean(br)),
+                                     ring_hop_ms=0.0))
+                for cp in cp_degrees:
+                    mks, sps, br = [], [], []
+                    for s in range(seeds):
+                        lens = _cell_lengths(ds, ml, skew, s)
+                        plan = lb_token(lens, WORLD, MAX_TOKENS, cp=cp)
+                        r = simulate_minibatch(plan, lens, scheme="cp",
+                                               cfg=cfg)
+                        mks.append(r.makespan)
+                        sps.append(len(lens) / r.makespan)
+                        br.append(r.bubble_rate)
+                    rows.append(dict(
+                        cell, cp=cp, strategy="lb_token", scheme="cp",
+                        makespan_s=float(np.mean(mks)),
+                        samples_per_s=float(np.mean(sps)),
+                        bubble_pct=100 * float(np.mean(br)),
+                        ring_hop_ms=1e3 * cb.ring_hop_time(cm, cp)))
+    # speedup vs the best non-cp backend in the same cell (the ring win)
+    best = {}
+    for r in rows:
+        if r["cp"] == 0:
+            key = (r["dataset"], r["max_len"], r["skew"])
+            best[key] = min(best.get(key, float("inf")), r["makespan_s"])
+    for r in rows:
+        b = best[(r["dataset"], r["max_len"], r["skew"])]
+        r["speedup_vs_best_noncp_pct"] = 100 * (b / r["makespan_s"] - 1)
+    return rows
+
+
+def validate(rows):
+    msgs = []
+    cells = sorted({(r["dataset"], r["max_len"], r["skew"]) for r in rows})
+    by = {(r["dataset"], r["max_len"], r["skew"], r["cp"], r["scheme"]): r
+          for r in rows}
+    cm = CommModel()
+    cb = B.get_backend("cp")
+
+    for ds, ml, skew in cells:
+        noncp = [r["makespan_s"] for r in rows
+                 if (r["dataset"], r["max_len"], r["skew"]) == (ds, ml, skew)
+                 and r["cp"] == 0]
+        ring = {r["cp"]: r["makespan_s"] for r in rows
+                if (r["dataset"], r["max_len"], r["skew"]) == (ds, ml, skew)
+                and r["cp"] > 0}
+        dom = by[(ds, ml, skew, 0, "odc")]["dominant_ratio"]
+        # 1. a ≥4×-median dominant sequence: cp strictly beats the field
+        if dom >= 4.0:
+            if not min(ring[c] for c in ring if c > 1) < min(noncp):
+                msgs.append(f"{ds}/max_len={ml}/skew={skew}: cp ring "
+                            f"{min(ring[c] for c in ring if c > 1):.4f} not "
+                            f"below best non-cp {min(noncp):.4f} "
+                            f"(dominant {dom:.1f}x)")
+        # 2. cp=1 degenerates to flat ODC (the 5% contract; float-exact)
+        odc = by[(ds, ml, skew, 0, "odc")]["makespan_s"]
+        if abs(ring[1] - odc) > 0.05 * odc:
+            msgs.append(f"{ds}/max_len={ml}/skew={skew}: cp=1 {ring[1]:.4f} "
+                        f"not within 5% of flat ODC {odc:.4f}")
+        if ring[1] != odc:
+            msgs.append(f"{ds}/max_len={ml}/skew={skew}: cp=1 {ring[1]} "
+                        f"not FLOAT-EXACT flat ODC {odc}")
+    # 3. hop model: 0.0 at cp=1, shrinking with ring depth
+    if cb.ring_hop_time(cm, 1) != 0.0:
+        msgs.append("ring hop at cp=1 must be literal 0.0")
+    hops = [cb.ring_hop_time(cm, c) for c in (2, 4, 8)]
+    if not all(a > b > 0.0 for a, b in zip(hops, hops[1:])):
+        msgs.append(f"ring hop not shrinking with cp: {hops}")
+    # 4. stretching the dominant sequence never speeds anything up
+    for ds, ml, _ in cells:
+        skews = sorted({s for d, m, s in cells if (d, m) == (ds, ml)})
+        for key in ({(0, sch) for _, sch in BASELINES}
+                    | {(c, "cp") for c in CP_DEGREES}):
+            cp, sch = key
+            for lo, hi in zip(skews, skews[1:]):
+                if by[(ds, ml, hi, cp, sch)]["makespan_s"] < \
+                        by[(ds, ml, lo, cp, sch)]["makespan_s"] - 1e-9:
+                    msgs.append(f"{ds}/max_len={ml}/{sch}/cp={cp}: makespan "
+                                f"not monotone in skew at x{hi}")
+    return msgs
+
+
+def emit_json(rows, path=BENCH_JSON):
+    from benchmarks.common import write_bench_json
+    return write_bench_json(
+        path, "cp_sweep",
+        {"world": WORLD, "minibs": MINIBS, "max_tokens": MAX_TOKENS,
+         "seeds": SEEDS, "max_lens": list(MAX_LENS), "skews": list(SKEWS),
+         "cp_degrees": list(CP_DEGREES), "sim_overlap_fraction": 0.0,
+         "kv_fraction": B.get_backend("cp").kv_fraction},
+        rows)
+
+
+def _write_sample_trace(path=SAMPLE_TRACE):
+    """One representative cp ring timeline (cp=4, 8×-median dominant
+    sequence) as a Chrome trace — the group-wide split waves and the
+    per-microbatch 'cp kv ring' hop segments visible per lane.  Uploaded
+    by the CI ``cp`` job."""
+    from repro.sim.trace import write_trace
+    lens = _cell_lengths("longalign", 32_768, 8.0, 0)
+    plan = lb_token(lens, WORLD, MAX_TOKENS, cp=4)
+    r = simulate_minibatch(plan, lens, scheme="cp",
+                           cfg=SimConfig(overlap=0.0))
+    return write_trace(path, r.timeline)
+
+
+def main():
+    from benchmarks.common import emit
+    rows = run()
+    emit(rows)
+    path = emit_json(rows)
+    print(f"# wrote {path}")
+    print(f"# wrote sample cp ring (cp=4, 8x-median dominant) trace "
+          f"{_write_sample_trace()}")
+    msgs = validate(rows)
+    print("# validation:", "OK" if not msgs else "; ".join(msgs))
+    return 0 if not msgs else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

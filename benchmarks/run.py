@@ -21,6 +21,9 @@
   pipe_sweep       (ours)               1F1B pipe backend vs flat ODC,
                                         stages × skew, fp32 vs chunked-int8
                                         cross-stage wire
+  cp_sweep         (ours)               context-parallel ring + lb_token vs
+                                        the best non-cp backend, max-seqlen
+                                        × cp degree × long-sequence skew
   roofline         (ours)               dry-run roofline table
 
 ``python -m benchmarks.run [module ...]`` — no args runs everything.
@@ -48,6 +51,7 @@ ALL = [
     "async_sweep",
     "timeline_sweep",
     "pipe_sweep",
+    "cp_sweep",
     "roofline",
 ]
 

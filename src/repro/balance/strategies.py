@@ -49,11 +49,22 @@ class Plan:
 
     ``profile`` records the device model the plan was balanced for (None =
     homogeneous assumption); the simulator picks it up so a plan
-    round-trips with the heterogeneity it was built against."""
+    round-trips with the heterogeneity it was built against.
+
+    Context parallelism (``lb_token``): with ``cp > 1`` each "device" row
+    of ``assignments`` is one cp ring *group* of ``cp`` adjacent devices;
+    ``cp_cells[g][m]`` lists the ``cp`` per-rank cells of group g's m-th
+    microbatch (a sample in ``cp_split`` appears in every cell — its
+    tokens are sequence-sharded over the whole ring; other samples sit
+    whole in exactly one cell).  ``assignments[g][m]`` stays the union, so
+    ``validate`` and sample accounting are cp-agnostic."""
 
     assignments: List[List[List[int]]]
     strategy: str = ""
     profile: Optional[DeviceProfile] = None
+    cp: int = 1
+    cp_cells: Optional[List[List[List[List[int]]]]] = None
+    cp_split: frozenset = frozenset()
 
     @property
     def world_size(self) -> int:
@@ -291,6 +302,97 @@ def lb_mini_het(seqlens: Sequence[int], world_size: int, max_tokens: int,
     return Plan(assignments, "LB-Mini-Het", profile=profile)
 
 
+def lb_token(seqlens: Sequence[int], world_size: int, max_tokens: int,
+             cost_model: CostModel = DEFAULT_COST_MODEL, *,
+             cp: int = 1, split_threshold: Optional[int] = None) -> Plan:
+    """Token-level chunk balancing for context parallelism (§cp backend).
+
+    The world is viewed as ``G = world_size // cp`` ring groups × ``cp``
+    ranks.  Sequences at least ``split_threshold`` long (default 4× the
+    minibatch median — inclusive, so an exactly-4×-median dominant
+    splits; anything over the per-rank token budget is always split)
+    are cp-split: their tokens are sequence-sharded over all cp
+    ranks of one group (head+tail interleaved chunks), landing as
+    cost/cp and tokens/cp per rank — the single-long-sequence straggler
+    becomes a group-wide wave instead of one device's tail.  Short
+    sequences stay whole in one (group, rank) cell.
+
+    1. Karmarkar–Karp the minibatch into G groups on *effective* costs
+       (cost/cp for split samples) — balances total group load;
+    2. per group, split samples pack into group-wide waves under the
+       per-rank token budget (paper Listing 1 on the /cp footprints);
+    3. per group, whole samples pack into per-rank cells (Listing 1),
+       then cp adjacent-cost cells form one wave (LB-Micro's trick at
+       cell granularity) — the wave's time is its slowest cell.
+
+    ``cp=1`` degenerates to LB-Mini's exact assignments (same KK calls),
+    so flat-ODC parity at cp=1 holds by construction.
+    """
+    if cp <= 1:
+        base = lb_mini(seqlens, world_size, max_tokens, cost_model)
+        return Plan(base.assignments, "LB-Token", cp=1)
+    if world_size % cp:
+        raise ValueError(
+            f"world_size {world_size} not divisible by cp={cp}")
+    G = world_size // cp
+    costs = get_compute_costs(seqlens, cost_model)
+    med = float(np.median(seqlens)) if len(seqlens) else 0.0
+    thr = (int(split_threshold) if split_threshold is not None
+           else max(1, int(4 * med)))
+    if max_tokens:
+        thr = min(thr, max_tokens)  # over-budget sequences MUST split
+    split = frozenset(i for i, l in enumerate(seqlens) if l >= thr)
+
+    eff = [costs[i] / cp if i in split else costs[i]
+           for i in range(len(seqlens))]
+    groups = karmarkar_karp(eff, G, equal_size=False)
+
+    assignments: List[List[List[int]]] = []
+    cp_cells: List[List[List[List[int]]]] = []
+    for part in groups:
+        longs = [i for i in part if i in split]
+        shorts = [i for i in part if i not in split]
+        mbs: List[List[int]] = []
+        cells: List[List[List[int]]] = []
+        if longs:
+            lc = [costs[i] / cp for i in longs]
+            ll = [max(1, seqlens[i] // cp) for i in longs]
+            for mb in microbatch_partition(lc, ll, max_tokens):
+                idx = [longs[i] for i in mb]
+                if idx:
+                    mbs.append(idx)
+                    cells.append([list(idx) for _ in range(cp)])
+        if shorts:
+            sc = [costs[i] for i in shorts]
+            sl = [seqlens[i] for i in shorts]
+            # cell count rounded UP to a multiple of cp: a wave's time is
+            # its slowest cell, so leaving ranks empty buys nothing —
+            # spread the whole-sample load over every rank of each wave
+            k = max(1, int(np.ceil(sum(sl) / max(max_tokens, 1))))
+            k = min(len(shorts), cp * int(np.ceil(k / cp)))
+            while True:
+                parts = karmarkar_karp(sc, k, equal_size=False)
+                if all(sum(sl[i] for i in p) <= max_tokens
+                       for p in parts if p) or k >= len(shorts):
+                    break
+                k += cp
+            cell_idx = [[shorts[i] for i in mb] for mb in parts if mb]
+            cell_cost = [sum(costs[i] for i in c) for c in cell_idx]
+            order = sorted(range(len(cell_idx)),
+                           key=lambda j: (-cell_cost[j], j))
+            for w in range(0, len(order), cp):
+                wave = [cell_idx[j] for j in order[w: w + cp]]
+                wave += [[] for _ in range(cp - len(wave))]
+                mbs.append([i for c in wave for i in c])
+                cells.append(wave)
+        if not mbs:
+            mbs, cells = [[]], [[[] for _ in range(cp)]]
+        assignments.append(mbs)
+        cp_cells.append(cells)
+    return Plan(assignments, "LB-Token", cp=cp, cp_cells=cp_cells,
+                cp_split=split)
+
+
 def verl_native(seqlens: Sequence[int], world_size: int, max_tokens: int,
                 minibatch_size: int,
                 cost_model: CostModel = DEFAULT_COST_MODEL) -> List[Plan]:
@@ -344,18 +446,25 @@ STRATEGIES = {
     "lb_micro": lb_micro,
     "lb_mini": lb_mini,
     "lb_mini_het": lb_mini_het,
+    "lb_token": lb_token,
 }
 
 
 def make_plan(seqlens: Sequence[int], world_size: int, max_tokens: int, *,
               strategy: str = "lb_mini",
               cost_model: CostModel = DEFAULT_COST_MODEL,
-              profile: Optional[DeviceProfile] = None) -> Plan:
+              profile: Optional[DeviceProfile] = None,
+              cp: int = 1) -> Plan:
     """Resolve a strategy name and balance one minibatch — the single entry
     point shared by the loaders, the posttrain dispatch queue, and the
-    drivers (only ``lb_mini_het`` takes a device profile, so callers no
-    longer special-case the kwarg)."""
+    drivers (only ``lb_mini_het`` takes a device profile and only
+    ``lb_token`` takes a cp degree, so callers no longer special-case the
+    kwargs)."""
     fn = STRATEGIES[strategy]
-    kw = {"profile": profile} if strategy == "lb_mini_het" else {}
+    kw = {}
+    if strategy == "lb_mini_het":
+        kw["profile"] = profile
+    if strategy == "lb_token":
+        kw["cp"] = cp
     return fn([int(l) for l in seqlens], world_size, max_tokens, cost_model,
               **kw)

@@ -58,6 +58,13 @@ Registered backends (canonical name → semantics):
                    and their Pallas kernels; the intra-stage collective
                    tier stays full precision.  With compression off
                    (``pipe``) the transport is bit-exact with ``hier``.
+  ``cp``           context-parallel ring attention over a ``(data, cp)``
+                   mesh: parameter transport is flat ODC's (identical
+                   bytes), the sequence dim is sharded over ``cp``, and
+                   attention circulates KV chunks p2p around the cp ring
+                   (``core.cp.ring_attention`` — bit-identical to
+                   monolithic flash attention on the gathered sequence).
+                   Alias: ``cp-ring``.
 
 Every legacy string flag keeps working: ``comm='collective'|'odc'`` and sim
 ``scheme='collective'|'odc'|'overlap'`` all resolve through
@@ -80,10 +87,12 @@ import jax.numpy as jnp
 from repro.balance.cost import DeviceProfile
 from repro.core import odc
 from repro.sim.timeline import (
+    CONTEXT_RING,
     INDEPENDENT,
     LOCKSTEP,
     PIPE_1F1B,
     PIPELINED,
+    ContextRingPolicy,
     SchedulingPolicy,
     instructions_1f1b,
 )
@@ -531,12 +540,64 @@ class PipeInt8Backend(PipeBackend):
     compress = True
 
 
+class CpRingBackend(ODCBackend):
+    """Context-parallel ring attention over a ``(data, cp)`` mesh.
+
+    Parameter transport is flat ODC's, unchanged: parameters stay
+    ZeRO-sharded over the *flat* ``(data, cp)`` world (``ring_gather`` /
+    ``ring_scatter_accumulate`` linearize multi-axis tuples), so the
+    per-layer FSDP wire bytes — and ``layer_comm_time`` — are identical
+    to ``odc`` at the same world size.  What cp adds is *inside* the
+    layer: the sequence dim of every batch leaf is sharded over ``cp``
+    and attention runs ``core.cp.ring_attention`` — each hop moves one
+    KV chunk p2p over the cp ring while the online-softmax state stays
+    put (bit-identical to monolithic flash attention on the gathered
+    sequence; see ``core/cp.py``).
+
+    The simulator charges those hops through :meth:`ring_hop_time` and
+    the ``context-ring`` policy: ``L * (cp-1)`` hops per microbatch, a
+    term that is literally ``0.0`` at cp=1 — a cp=1 run schedules
+    float-exactly like flat ODC (the degeneration contract
+    ``benchmarks/cp_sweep.py`` pins).  Token-level chunk balance
+    (``lb_token``) is what makes the axis pay: a dominant sequence is
+    split over the cp ranks, dividing the straggler device's compute by
+    ``cp`` where no minibatch-level plan can.
+    """
+
+    name = "cp"
+    aliases = ("cp-ring",)
+    policy = CONTEXT_RING
+    #: modeled bytes of ONE cp ring hop's KV payload as a fraction of a
+    #: layer's parameter shard-set bytes, before the 1/cp sequence split:
+    #: k+v for the layer's kv heads ≈ an eighth of the layer stack's
+    #: weights at GQA ratios — a modeling knob, like pipe.act_fraction
+    kv_fraction = 0.125
+
+    def ring_hop_time(self, comm_model, cp: int) -> float:
+        """Seconds for one KV-chunk hop on a ``cp``-deep ring: each rank
+        forwards its 1/cp sequence slice of the layer's K and V blocks to
+        the next rank (intra-node NVSwitch-class links — cp ranks are
+        co-located by construction of ``make_cp_mesh``)."""
+        cm = comm_model
+        if cp <= 1:
+            return 0.0
+        vol = cm.layer_param_bytes * self.kv_fraction / cp
+        return cm.latency + vol / cm.intra_bw
+
+    def ring_policy(self, comm_model, cp: int) -> ContextRingPolicy:
+        """The scheduling policy for a ``cp``-deep run of this backend."""
+        if cp <= 1:
+            return CONTEXT_RING  # hop term 0.0 — float-exact flat ODC
+        return ContextRingPolicy(cp, self.ring_hop_time(comm_model, cp))
+
+
 COLLECTIVE = register_backend(CollectiveBackend())
 ODC = register_backend(ODCBackend())
 ODC_OVERLAP = register_backend(OverlapODCBackend())
 HIER = register_backend(HierBackend())
 PIPE = register_backend(PipeBackend())
 PIPE_INT8 = register_backend(PipeInt8Backend())
+CP = register_backend(CpRingBackend())
 
 
 # ===========================================================================

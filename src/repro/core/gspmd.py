@@ -314,9 +314,16 @@ def _data_dims(spec: P, da_axes) -> list:
 # ===========================================================================
 # batch / cache specs
 # ===========================================================================
-def batch_pspecs(batch, rules: ShardingRules, *, microbatched: bool = True):
-    """tokens/targets/masks: (M, B, S) or (B, S); embeds: (..., S, d)."""
+def batch_pspecs(batch, rules: ShardingRules, *, microbatched: bool = True,
+                 cp_axis=None):
+    """tokens/targets/masks: (M, B, S) or (B, S); embeds: (..., S, d).
+
+    With ``cp_axis`` (context parallelism), the sequence dim of the
+    token-shaped leaves is sharded over that axis and the batch dim over
+    the remaining dp axes."""
     dp = rules.dp_axes
+    if cp_axis is not None:
+        dp = tuple(a for a in dp if a != cp_axis)
     lead = (None,) if microbatched else ()
 
     def spec(path, x):
@@ -325,6 +332,8 @@ def batch_pspecs(batch, rules: ShardingRules, *, microbatched: bool = True):
         nd = x.ndim - len(lead)
         if name in ("encoder_embeds", "vision_embeds"):
             return P(*lead, dp, *([None] * (nd - 2)))
+        if cp_axis is not None and nd >= 2:
+            return P(*lead, dp, cp_axis, *([None] * (nd - 2)))
         return P(*lead, dp, *([None] * (nd - 1)))
 
     return jax.tree_util.tree_map_with_path(spec, batch)
@@ -478,10 +487,19 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, gcfg: GSPMDConfig,
             "comm='pipe' stage-partitions the layer stack over a "
             "(pipe, data) 2D mesh — set ShardingRules(data=('pipe', "
             f"'data')) (or any 2-axis tuple); got data={rules.data!r}")
+    if comm_backend.name == "cp" and len(da) < 2:
+        raise ValueError(
+            "comm='cp' shards the batch sequence dim over the trailing "
+            "data axis — set ShardingRules(data=('data', 'cp')) (or any "
+            f"2-axis tuple, cp minor); got data={rules.data!r}")
     if comm_backend.name.startswith("pipe"):
         pipe_stages = gcfg.pipe_stages or mesh.shape[da[0]]
     else:
         pipe_stages = 1
+    # context parallelism: params stay ZeRO-sharded over the FLAT data
+    # tuple (identical bytes to flat ODC); what changes is the batch layout
+    # (sequence dim over the cp axis) and the attention impl (KV ring).
+    cp_axis = da[-1] if comm_backend.name == "cp" else None
     manual = tuple(da) + ((rules.pod,) if rules.pod else ())
     ep = _moe_expert_parallel(cfg.num_experts, mesh, rules.model)
 
@@ -660,6 +678,15 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, gcfg: GSPMDConfig,
     def grad_minibatch(params_local, batch_local):
         from repro.models import moe as moe_mod
         moe_mod.set_ep_axis(ep_da)  # trace-time: weight-stationary dispatch
+        if cp_axis is not None:
+            from repro.core import cp as cp_mod
+            from repro.models import layers as L
+            # trace-time: every attention inside this shard_map region runs
+            # the cp KV ring (static window) or the all_gather fallback
+            # (traced window); step() restores the impl in its finally
+            L.set_attention_impl(cp_mod.cp_attention_impl(
+                cp_axis, blk_q=min(128, gcfg.block_kv) or 128,
+                blk_k=min(128, gcfg.block_kv) or 128))
         return _grad_minibatch(params_local, batch_local)
 
     def _grad_minibatch(params_local, batch_local):
@@ -679,11 +706,29 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, gcfg: GSPMDConfig,
         grads = jax.tree.map(finalize, grads, manual_pspecs)
         return grads, {"loss": lsum / denom, "tokens": tok}
 
+    # batch leaves carrying a sequence dim at position 2 of (M, B, S, ...)
+    # — under cp their S dim is sharded over the cp axis (the host
+    # pre-interleaves S so each contiguous shard is a head+tail chunk pair)
+    _SEQ_LEAVES = ("tokens", "targets", "positions", "segment_ids",
+                   "loss_mask")
+
     def batch_manual_specs(batch):
-        return jax.tree.map(
-            lambda x: P(None, manual, *([None] * (x.ndim - 2))), batch)
+        if cp_axis is None:
+            return jax.tree.map(
+                lambda x: P(None, manual, *([None] * (x.ndim - 2))), batch)
+        bman = tuple(a for a in manual if a != cp_axis)
+
+        def spec(path, x):
+            keys = [k.key for k in path if hasattr(k, "key")]
+            name = keys[-1] if keys else ""
+            if name in _SEQ_LEAVES and x.ndim >= 3:
+                return P(None, bman, cp_axis, *([None] * (x.ndim - 3)))
+            return P(None, bman, *([None] * (x.ndim - 2)))
+
+        return jax.tree_util.tree_map_with_path(spec, batch)
 
     def step(params, opt_state, batch):
+        from repro.models import layers as L
         from repro.models import moe as moe_mod
         sharded = compat.shard_map(
             grad_minibatch,
@@ -693,10 +738,13 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, gcfg: GSPMDConfig,
             check_vma=False,
             axis_names=set(manual),
         )
+        prev_impl = L.get_attention_impl()
         try:
             grads, metrics = sharded(params, batch)
         finally:
             moe_mod.set_ep_axis(None)
+            if cp_axis is not None:
+                L.set_attention_impl(prev_impl)
         scale = lr_schedule(opt_state["step"]) if lr_schedule else 1.0
         new_params, new_opt = adamw_update(opt_cfg, params, grads, opt_state,
                                            lr_scale=scale)
@@ -729,7 +777,11 @@ def build_train_artifacts(cfg: ModelConfig, mesh: Mesh, gcfg: GSPMDConfig,
                                            sharding=NamedSharding(mesh, sp)),
         opt_shape, ospecs)
 
-    bspecs = batch_pspecs(batch_shapes, rules)
+    from repro.core import backend as B
+    cb, _ = B.resolve(gcfg.comm, gcfg.schedule)
+    da = rules.data if isinstance(rules.data, tuple) else (rules.data,)
+    cp_ax = da[-1] if (cb.name == "cp" and len(da) > 1) else None
+    bspecs = batch_pspecs(batch_shapes, rules, cp_axis=cp_ax)
     batch_in = jax.tree.map(
         lambda s, sp: jax.ShapeDtypeStruct(s.shape, s.dtype,
                                            sharding=NamedSharding(mesh, sp)),

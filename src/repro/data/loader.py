@@ -25,7 +25,8 @@ class SyntheticSFTLoader:
                  minibatch_per_device: int, max_tokens: int,
                  strategy: str = "lb_mini", max_len: int = 0,
                  cost_model: CostModel = DEFAULT_COST_MODEL, seed: int = 0,
-                 device_profile: Optional[DeviceProfile] = None):
+                 device_profile: Optional[DeviceProfile] = None,
+                 cp: int = 1):
         self.dataset = dataset
         self.vocab = vocab_size
         self.world = world_size
@@ -37,6 +38,7 @@ class SyntheticSFTLoader:
         self.cost_model = cost_model
         self.seed = seed
         self.device_profile = device_profile
+        self.cp = cp  # context-parallel degree (used by strategy lb_token)
 
     def steps(self, num_steps: int, skip: int = 0) -> Iterator[dict]:
         """Yield per-step batches.  ``skip`` fast-forwards a resumed run:
@@ -60,7 +62,7 @@ class SyntheticSFTLoader:
             plan: Plan = make_plan(
                 lens, self.world, self.max_tokens,
                 strategy=self.strategy_name, cost_model=self.cost_model,
-                profile=self.device_profile)
+                profile=self.device_profile, cp=self.cp)
             yield {"plan": plan, "lengths": lens, "sample_tokens": toks}
 
 

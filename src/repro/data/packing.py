@@ -77,16 +77,26 @@ def build_minibatch(plan, sample_tokens: Sequence[np.ndarray],
     extras      {name: fn(M, world) -> array} appended to the batch (stub
                 modality embeddings in the drivers).
 
+    Context parallelism: for a cp plan (``plan.cp > 1``, from
+    ``lb_token``) each batch row is one ring *group* — its buffer is
+    ``cp * buffer_len`` tokens (so every cp rank's sequence shard is
+    ``buffer_len``, the same per-device memory budget), and the packed
+    sequence dim is pre-interleaved with
+    ``repro.core.cp.interleave_indices`` so the engine's contiguous
+    shard_map split hands each rank its head+tail chunk pair.
+
     Returns jnp arrays, ready for a jitted train step.
     """
     import jax.numpy as jnp  # deferred: keep repro.data importable sans jax
 
+    cp = getattr(plan, "cp", 1)
+    row_len = buffer_len * cp if cp > 1 else buffer_len
     M = max(plan.max_microbatches, 1)
     world = plan.world_size
     per_dev = []
     for dev in plan.assignments:
         mbs = list(dev) + [[] for _ in range(M - len(dev))]
-        d = pack_plan_to_batches(mbs, sample_tokens, buffer_len, pad_id)
+        d = pack_plan_to_batches(mbs, sample_tokens, row_len, pad_id)
         if advantages is not None:
             # rescale each sample's loss-mask segment by its advantage
             for m, mb in enumerate(mbs):
@@ -100,6 +110,11 @@ def build_minibatch(plan, sample_tokens: Sequence[np.ndarray],
         k: np.concatenate([d[k] for d in per_dev], axis=1)
         for k in per_dev[0]
     }
+    if cp > 1:
+        from repro.core.cp import interleave_indices
+        perm = interleave_indices(row_len, cp)
+        batch = {k: (v[..., perm] if v.shape[-1] == row_len else v)
+                 for k, v in batch.items()}
     if extras:  # e.g. stub modality embeddings
         for k, v in extras.items():
             batch[k] = v(M, world)

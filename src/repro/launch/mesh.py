@@ -6,6 +6,12 @@ touches jax device state.  The production target is TPU v5e:
   single pod:  (data=16, model=16)            = 256 chips
   multi-pod:   (pod=2, data=16, model=16)     = 512 chips
 
+Every host-mesh layout goes through ONE constructor, :func:`make_mesh` —
+the former ``make_host_mesh`` / ``make_hier_mesh`` / ``make_pipe_mesh``
+(and the new ``make_cp_mesh``) are thin aliases that pick the axis names
+and error vocabulary; they build bit-identical meshes to the copy-grown
+originals (``tests/test_mesh.py`` pins that).
+
 The dry-run launcher sets XLA_FLAGS=--xla_force_host_platform_device_count
 *before* importing jax; everything else sees the real single CPU device.
 """
@@ -22,17 +28,51 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def make_mesh(axes, *, strict=True, label=None, unit="axis", kind="host"):
+    """A mesh over local devices from an ordered ``{name: size}`` mapping.
+
+    At most one axis size may be 0 — it consumes the remainder of the
+    device count after the fixed axes.  ``strict=True`` (the hier/pipe/cp
+    contract) raises ``ValueError`` when the fixed axes don't evenly
+    divide the device count; ``strict=False`` (the legacy host-mesh
+    contract) silently floors the free axis and truncates the device
+    list.  ``label``/``unit``/``kind`` only shape the error messages.
+    """
+    n = jax.device_count()
+    names = tuple(axes)
+    sizes = [int(axes[a]) for a in names]
+    if sizes.count(0) > 1:
+        raise ValueError(f"at most one free (0) axis: {dict(axes)}")
+    if 0 in sizes:
+        i = sizes.index(0)
+        fixed = 1
+        for s in sizes[:i] + sizes[i + 1:]:
+            fixed *= s
+        if strict and (fixed <= 0 or n % fixed or n < fixed):
+            lbl = label or "*".join(names[:i] + names[i + 1:])
+            vals = "*".join(str(s) for s in sizes[:i] + sizes[i + 1:])
+            raise ValueError(
+                f"{lbl} ({vals}) must evenly divide the device count ({n}) "
+                f"— every {unit} needs the same number of devices and at "
+                f"least one")
+        sizes[i] = n // fixed
+    shape = tuple(sizes)
+    total = int(np.prod(shape))
+    if total > n:
+        raise ValueError(f"{kind} mesh {shape} needs {total} devices, "
+                         f"only {n} available")
+    devs = np.asarray(jax.devices()[:total]).reshape(shape)
+    return Mesh(devs, names)
+
+
 def make_host_mesh(data: int = 0, model: int = 1, pod: int = 1):
     """A small mesh over whatever local devices exist (tests / examples).
 
     data=0 consumes all remaining devices on the data axis."""
-    n = jax.device_count()
-    if data == 0:
-        data = n // (model * pod)
-    shape = (pod, data, model) if pod > 1 else (data, model)
-    axes = ("pod", "data", "model") if pod > 1 else ("data", "model")
-    devs = np.asarray(jax.devices()[: int(np.prod(shape))]).reshape(shape)
-    return Mesh(devs, axes)
+    if pod > 1:
+        return make_mesh({"pod": pod, "data": data, "model": model},
+                         strict=False)
+    return make_mesh({"data": data, "model": model}, strict=False)
 
 
 def make_hier_mesh(nodes: int = 2, device: int = 0, model: int = 1):
@@ -42,20 +82,8 @@ def make_hier_mesh(nodes: int = 2, device: int = 0, model: int = 1):
     intra-node gathers collective, inter-node gathers a p2p ring.
 
     device=0 consumes all remaining devices on the intra-node axis."""
-    n = jax.device_count()
-    if device == 0:
-        if nodes * model <= 0 or n % (nodes * model) or n < nodes * model:
-            raise ValueError(
-                f"nodes*model ({nodes}*{model}) must evenly divide the "
-                f"device count ({n}) — every node needs the same number of "
-                f"devices and at least one")
-        device = n // (nodes * model)
-    shape = (nodes, device, model)
-    if int(np.prod(shape)) > n:
-        raise ValueError(f"hier mesh {shape} needs {int(np.prod(shape))} "
-                         f"devices, only {n} available")
-    devs = np.asarray(jax.devices()[: int(np.prod(shape))]).reshape(shape)
-    return Mesh(devs, ("node", "device", "model"))
+    return make_mesh({"node": nodes, "device": device, "model": model},
+                     label="nodes*model", unit="node", kind="hier")
 
 
 def make_pipe_mesh(stages: int = 2, data: int = 0, model: int = 1):
@@ -67,17 +95,19 @@ def make_pipe_mesh(stages: int = 2, data: int = 0, model: int = 1):
     stage-boundary traffic rides the p2p ring transport.
 
     data=0 consumes all remaining devices on the intra-stage axis."""
-    n = jax.device_count()
-    if data == 0:
-        if stages * model <= 0 or n % (stages * model) or n < stages * model:
-            raise ValueError(
-                f"stages*model ({stages}*{model}) must evenly divide the "
-                f"device count ({n}) — every stage needs the same number of "
-                f"devices and at least one")
-        data = n // (stages * model)
-    shape = (stages, data, model)
-    if int(np.prod(shape)) > n:
-        raise ValueError(f"pipe mesh {shape} needs {int(np.prod(shape))} "
-                         f"devices, only {n} available")
-    devs = np.asarray(jax.devices()[: int(np.prod(shape))]).reshape(shape)
-    return Mesh(devs, ("pipe", "data", "model"))
+    return make_mesh({"pipe": stages, "data": data, "model": model},
+                     label="stages*model", unit="stage", kind="pipe")
+
+
+def make_cp_mesh(cp: int = 2, data: int = 0, model: int = 1):
+    """A (data, cp, model) mesh over local devices — the context-parallel
+    layout for the ``cp`` comm backend (``ShardingRules(data=('data',
+    'cp'))``): parameters stay ZeRO-sharded over the flat data×cp world
+    (identical bytes to flat ODC), the batch's sequence dim is sharded
+    over ``cp``, and attention circulates KV chunks around the cp ring
+    (``core.cp.ring_attention``).  The cp axis is minor, so a sequence's
+    cp group sits on adjacent (intra-node) devices.
+
+    data=0 consumes all remaining devices on the data axis."""
+    return make_mesh({"data": data, "cp": cp, "model": model},
+                     label="cp*model", unit="cp group", kind="cp")

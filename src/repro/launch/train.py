@@ -33,7 +33,12 @@ from repro.data.loader import SyntheticSFTLoader
 from repro.data.packing import build_minibatch  # noqa: F401 (re-export:
 #   the plan->batch assembly now lives in repro.data.packing, shared with
 #   the posttrain pipeline and the GRPO example)
-from repro.launch.mesh import make_hier_mesh, make_host_mesh, make_pipe_mesh
+from repro.launch.mesh import (
+    make_cp_mesh,
+    make_hier_mesh,
+    make_host_mesh,
+    make_pipe_mesh,
+)
 from repro.models import transformer as T
 from repro.optim import AdamWConfig, adamw_init
 from repro.sim.trace import TraceRecorder, maybe_span
@@ -48,7 +53,7 @@ def main(argv=None):
                     choices=("longalign", "swesmith", "aime"))
     ap.add_argument("--strategy", default="lb_mini",
                     choices=("local_sort", "lb_micro", "lb_mini",
-                             "lb_mini_het"))
+                             "lb_mini_het", "lb_token"))
     ap.add_argument("--schedule", default="minibatch",
                     choices=backends.SCHEDULES,
                     help="where gathers/scatters are PLACED: 'layer' (per "
@@ -67,8 +72,10 @@ def main(argv=None):
                          "mesh, see --nodes); 'pipe'/'pipe-int8' (1F1B "
                          "stage pipeline over a pipe×data mesh, see "
                          "--pipe-stages; -int8 compresses stage-boundary "
-                         "traffic to chunked int8); legacy aliases (e.g. "
-                         "the sim's 'overlap') resolve to the same backends")
+                         "traffic to chunked int8); 'cp'/'cp-ring' (ring "
+                         "attention over a data×cp mesh, see --cp); legacy "
+                         "aliases (e.g. the sim's 'overlap') resolve to the "
+                         "same backends")
     ap.add_argument("--nodes", type=int, default=2,
                     help="with --comm hier: node count of the (node, "
                          "device, model) mesh (devices per node = "
@@ -80,6 +87,13 @@ def main(argv=None):
     ap.add_argument("--pipe-interleave", action="store_true",
                     help="with --comm pipe/pipe-int8: interleaved 1F1B "
                          "(halved warmup depth)")
+    ap.add_argument("--cp", type=int, default=2,
+                    help="with --comm cp/cp-ring: context-parallel degree "
+                         "of the (data, cp, model) mesh — each ring group "
+                         "of cp adjacent devices sequence-shards its "
+                         "microbatches (ring attention); pair with "
+                         "--strategy lb_token so over-long sequences are "
+                         "token-split across the ring")
     ap.add_argument("--device-profile", default="none",
                     choices=("none", "homogeneous", "one_slow", "bimodal",
                              "uniform"),
@@ -134,6 +148,13 @@ def main(argv=None):
         mesh = make_pipe_mesh(stages=args.pipe_stages, model=args.model_axis)
         rules = ShardingRules(data=("pipe", "data"))
         world = mesh.shape["pipe"] * mesh.shape["data"]
+    elif comm.name == "cp":
+        # context-parallel ring groups: params stay ZeRO-sharded over the
+        # flat (data, cp) axes (byte-identical to flat ODC); the batch
+        # sequence dim is sharded over cp (ring attention inside groups)
+        mesh = make_cp_mesh(cp=args.cp, model=args.model_axis)
+        rules = ShardingRules(data=("data", "cp"))
+        world = mesh.shape["data"] * mesh.shape["cp"]
     else:
         mesh = make_host_mesh(data=args.data_axis, model=args.model_axis)
         rules = ShardingRules()
@@ -193,7 +214,8 @@ def main(argv=None):
         minibatch_per_device=args.minibatch_per_device,
         max_tokens=args.max_tokens, strategy=args.strategy,
         max_len=args.max_len, cost_model=cm, seed=args.seed,
-        device_profile=profile)
+        device_profile=profile,
+        cp=args.cp if comm.name == "cp" else 1)
 
     def extras_for(step):
         """Per-step-seeded modality stubs: a resumed run regenerates the

@@ -14,6 +14,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 NEG_INF = -2.0e38
 
@@ -44,19 +45,58 @@ _ATTN_IMPL = None
 
 
 def set_attention_impl(fn):
-    """fn(q, k, v, **kw) or None to restore the jnp path."""
+    """fn(q, k, v, **kw) or None to restore the jnp path.
+
+    Returns the previously installed impl so callers can restore it."""
     global _ATTN_IMPL
+    prev = _ATTN_IMPL
     _ATTN_IMPL = fn
+    return prev
+
+
+def get_attention_impl():
+    return _ATTN_IMPL
+
+
+class _AttnImplGuard:
+    """Handle returned by the impl installers: holds the displaced impl and
+    restores it on ``close()`` / ``with``-exit, so a test or module can't
+    leak its attention backend into the next one."""
+
+    def __init__(self, prev):
+        self._prev = prev
+        self._done = False
+
+    def close(self):
+        if not self._done:
+            self._done = True
+            set_attention_impl(self._prev)
+
+    restore = close
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
 
 
 def use_pallas_flash_attention(*, interpret=None, blk_q=128, blk_k=128):
-    """Install the Pallas flash-attention kernel as the attention impl."""
-    from repro.kernels.flash_attention import flash_attention_pallas
+    """Install the Pallas flash-attention kernel as the attention impl.
+
+    Returns a guard usable as a context manager; on exit (or ``.close()``)
+    the previously installed impl is restored:
+
+        with use_pallas_flash_attention():
+            loss = step(...)
+    """
+    from repro.kernels.flash_attention import flash_attention_diff
 
     def impl(q, k, v, *, causal=True, window=0, logit_softcap=0.0,
              q_positions=None, kv_positions=None, q_segment_ids=None,
              kv_segment_ids=None, block_kv=0, scale=None):
-        if not isinstance(window, int):
+        if not isinstance(window, (int, np.integer)):
             # traced per-layer window (mixed local/global scans): the kernel
             # needs a static window — fall back to the jnp path
             return blockwise_attention(
@@ -67,15 +107,17 @@ def use_pallas_flash_attention(*, interpret=None, blk_q=128, blk_k=128):
                 block_kv=block_kv or k.shape[1], scale=scale)
         interp = (jax.default_backend() != "tpu") if interpret is None \
             else interpret
-        return flash_attention_pallas(
-            q, k, v, causal=causal, window=window,
+        # the custom-VJP wrapper: pallas forward, closed-form jnp backward
+        # (raw pallas_call has no AD rule)
+        return flash_attention_diff(
+            q, k, v, causal=causal, window=int(window),
             logit_softcap=logit_softcap,
             q_positions=q_positions, kv_positions=kv_positions,
             q_segment_ids=q_segment_ids, kv_segment_ids=kv_segment_ids,
             blk_q=blk_q, blk_k=min(blk_k, block_kv) if block_kv else blk_k,
             scale=scale, interpret=interp)
 
-    set_attention_impl(impl)
+    return _AttnImplGuard(set_attention_impl(impl))
 
 
 # --------------------------------------------------------------------------

@@ -187,6 +187,18 @@ def _window_schedule(cfg):
     )
 
 
+def _static_window(cfg):
+    """The single static window when every layer shares one (the common
+    all-global or all-local case), else None.  A static window is hoisted
+    out of the layer scan's carries, which lets window-specialized
+    attention impls engage (the Pallas kernel, the cp ring — both need a
+    static window; a traced per-layer schedule forces their jnp
+    fallbacks)."""
+    ws = {cfg.sliding_window if cfg.layer_kind(i) == "local" else 0
+          for i in range(cfg.num_layers)}
+    return ws.pop() if len(ws) == 1 else None
+
+
 def _logits(cfg, params, x):
     x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
     head = params.get("lm_head")
@@ -220,27 +232,30 @@ def _forward_dense(cfg, params, batch, caches, cache_index, remat, block_kv,
     x = _embed(cfg, params, batch)
     positions = batch.get("positions")
     segment_ids = batch.get("segment_ids")
-    windows = _window_schedule(cfg)
+    sw = _static_window(cfg)  # hoisted when uniform across layers
+    windows = None if sw is not None else _window_schedule(cfg)
 
     if prefetch is not None:
         def pbody(x, scanned):
-            lp, window = scanned  # lp already materialized one slot ahead
+            if sw is not None:  # lp materialized one slot ahead
+                (lp,), window = scanned, sw
+            else:
+                lp, window = scanned
             return _apply_dense_block(
                 cfg, lp, x, window=window, positions=positions,
                 segment_ids=segment_ids, cache=None,
                 cache_index=cache_index, block_kv=block_kv,
             )
 
-        x, _ = _prefetch_scan(pbody, x, params["layers"], (windows,),
+        extras = () if sw is not None else (windows,)
+        x, _ = _prefetch_scan(pbody, x, params["layers"], extras,
                               prefetch=prefetch, remat=remat)
         return x, jnp.float32(0.0), None
 
     def body(x, scanned):
-        if caches is None:
-            lp, window = scanned
-            cache = None
-        else:
-            lp, window, cache = scanned
+        lp, *rest = scanned
+        window = sw if sw is not None else rest.pop(0)
+        cache = rest.pop(0) if caches is not None else None
         x, cache = _apply_dense_block(
             cfg, pxform(lp), x, window=window, positions=positions,
             segment_ids=segment_ids, cache=cache, cache_index=cache_index,
@@ -250,7 +265,11 @@ def _forward_dense(cfg, params, batch, caches, cache_index, remat, block_kv,
 
     if remat:
         body = jax.checkpoint(body)
-    xs = (params["layers"], windows) if caches is None else (params["layers"], windows, caches)
+    xs = (params["layers"],)
+    if sw is None:
+        xs += (windows,)
+    if caches is not None:
+        xs += (caches,)
     x, new_caches = jax.lax.scan(body, x, xs)
     return x, jnp.float32(0.0), new_caches
 

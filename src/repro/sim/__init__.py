@@ -13,12 +13,14 @@ from repro.sim.engine import (  # noqa: F401
     simulate_training,
 )
 from repro.sim.timeline import (  # noqa: F401
+    CONTEXT_RING,
     EVENT_KINDS,
     INDEPENDENT,
     LOCKSTEP,
     PIPE_1F1B,
     PIPELINED,
     POLICIES,
+    ContextRingPolicy,
     Event,
     SchedulingPolicy,
     Timeline,

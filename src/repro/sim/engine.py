@@ -83,10 +83,17 @@ def _scheme_backend(scheme: str):
     return get_backend(scheme)
 
 
-def _resolve_policy(backend, policy) -> SchedulingPolicy:
+def _resolve_policy(backend, policy, *, cp: int = 1,
+                    cm=None) -> SchedulingPolicy:
     """The backend's registered policy unless the caller composes another
-    one over the same cost model (e.g. pipelined 'hier')."""
-    return get_policy(policy) if policy is not None else backend.policy
+    one over the same cost model (e.g. pipelined 'hier').  A cp plan
+    (cp > 1) on a ring-capable backend specializes the policy with the
+    ring-hop cost (``CpRingBackend.ring_policy``)."""
+    if policy is not None:
+        return get_policy(policy)
+    if cp > 1 and hasattr(backend, "ring_policy"):
+        return backend.ring_policy(cm, cp)
+    return backend.policy
 
 
 @dataclasses.dataclass(frozen=True)
@@ -162,8 +169,26 @@ class SimResult:
 
 def _microbatch_times(plan: Plan, seqlens: Sequence[int], cfg: SimConfig):
     """t[d][m]: compute seconds of device d's m-th microbatch (whole model,
-    all layers)."""
+    all layers).
+
+    For a cp plan (cp > 1) each row is one ring group and a microbatch is
+    a wave of ``cp`` per-rank cells advancing in lockstep through the KV
+    ring — its compute time is the slowest cell's.  A cp-split sample
+    contributes cost/cp to each of its cells (sequence-sharded, causally
+    balanced by the head+tail interleave)."""
     cm = cfg.cost_model
+    if plan.cp > 1 and plan.cp_cells is not None:
+        split = plan.cp_split
+
+        def cell_cost(cell):
+            return sum(cm.sample_cost(seqlens[i]) / (plan.cp if i in split
+                                                     else 1)
+                       for i in cell)
+
+        return [[max((cell_cost(c) for c in cells), default=0.0)
+                 * cfg.time_per_cost * cfg.num_layers
+                 for cells in dev]
+                for dev in plan.cp_cells]
     out = []
     for dev in plan.assignments:
         ts = []
@@ -261,7 +286,7 @@ def simulate_minibatch(plan: Plan, seqlens: Sequence[int], *,
             "the plan) are set — the slowdown would be applied twice; "
             "fold the speeds into the profile instead")
     backend = _scheme_backend(scheme)
-    pol = _resolve_policy(backend, policy)
+    pol = _resolve_policy(backend, policy, cp=plan.cp, cm=cfg.comm)
     times, cl = _step_times_and_wire(plan, seqlens, cfg, backend,
                                      device_speed, profile, step)
     L = cfg.num_layers
@@ -338,7 +363,7 @@ def simulate_training(steps, *, scheme: str, cfg: SimConfig = SimConfig(),
             "fold the speeds into the profile instead")
 
     backend = _scheme_backend(scheme)
-    pol = _resolve_policy(backend, policy)
+    pol = _resolve_policy(backend, policy, cp=steps[0][0].cp, cm=cfg.comm)
     L = cfg.num_layers
     tl = timeline if timeline is not None else Timeline(
         source="sim", meta={"model": "training", "scheme": backend.name,

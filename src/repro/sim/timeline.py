@@ -250,6 +250,49 @@ class IndependentPolicy(SchedulingPolicy):
         return mk, blocks
 
 
+class ContextRingPolicy(SchedulingPolicy):
+    """Context parallelism: independent device progress plus the per-layer
+    KV ring — every attention layer circulates the sequence-sharded KV
+    blocks over the ``cp`` ring, so each microbatch pays ``L * (cp-1)``
+    p2p hops of ``hop_s`` seconds on top of its compute and ODC wire time.
+
+    Degeneration contract: at ``cp=1`` (or ``hop_s=0``) the hop term is
+    the literal float ``0.0`` and the accumulation is ``b + comm + 0.0``
+    — bitwise the ``IndependentPolicy`` total, with the identical segment
+    list (no empty hop segment is appended), so a cp=1 run schedules
+    float-exactly like flat ODC.
+
+    The head+tail interleaved chunk layout (``core.cp``) keeps the causal
+    unmasked area equal across ranks, which is why hops are charged
+    uniformly per device rather than by ring depth: masked chunk-steps
+    are exact no-ops in the kernel's update algebra, so a real ring may
+    skip them — the policy models the balanced schedule that skipping
+    yields.
+    """
+
+    name = "context-ring"
+
+    def __init__(self, cp: int = 1, hop_s: float = 0.0):
+        self.cp = int(cp)
+        self.hop_s = float(hop_s)
+
+    def step_blocks(self, times, cl, L):
+        hop = L * (self.cp - 1) * self.hop_s
+        blocks = []
+        for d, ts in enumerate(times):
+            b = sum(ts)
+            comm = L * cl[d] * len(ts)
+            ring = hop * len(ts)
+            total = b + comm + ring
+            segs = [("compute", t, f"mb{m}") for m, t in enumerate(ts)]
+            segs.append(("comm", comm, "odc wire"))
+            if ring > 0.0:
+                segs.append(("comm", ring, "cp kv ring"))
+            blocks.append((total, segs))
+        mk = max((t for t, _ in blocks), default=0.0)
+        return mk, blocks
+
+
 class PipelinedPolicy(SchedulingPolicy):
     """Independent progress + double-buffered prefetch: layer l+1's gather
     runs under layer l's compute, so per (microbatch, layer) the device
@@ -457,9 +500,11 @@ LOCKSTEP = LockstepPolicy()
 INDEPENDENT = IndependentPolicy()
 PIPELINED = PipelinedPolicy()
 PIPE_1F1B = PipelineStagePolicy()
+CONTEXT_RING = ContextRingPolicy()
 
 POLICIES: Dict[str, SchedulingPolicy] = {
-    p.name: p for p in (LOCKSTEP, INDEPENDENT, PIPELINED, PIPE_1F1B)
+    p.name: p for p in (LOCKSTEP, INDEPENDENT, PIPELINED, PIPE_1F1B,
+                        CONTEXT_RING)
 }
 
 

@@ -47,10 +47,11 @@ KEY = jax.random.PRNGKey(0)
 # registry resolution
 # ===========================================================================
 def test_registry_names_and_aliases():
-    assert B.backend_names() == ("collective", "hier", "odc", "odc-overlap",
-                             "pipe", "pipe-int8")
+    assert B.backend_names() == ("collective", "cp", "hier", "odc",
+                                 "odc-overlap", "pipe", "pipe-int8")
     assert "overlap" in B.backend_names(include_aliases=True)
     assert B.get_backend("overlap") is B.get_backend("odc-overlap")
+    assert B.get_backend("cp-ring") is B.get_backend("cp")
     assert B.get_backend(B.ODC) is B.ODC  # instances pass through
     with pytest.raises(ValueError, match="unknown comm backend"):
         B.get_backend("nvlink")

@@ -33,11 +33,9 @@ def test_model_forward_with_pallas_attention(arch):
             KEY, (B, cfg.frontend_tokens, cfg.d_model))
 
     ref, _, _ = T.apply(cfg, params, batch, block_kv=32)
-    try:
-        L.use_pallas_flash_attention(interpret=True, blk_q=32, blk_k=32)
+    with L.use_pallas_flash_attention(interpret=True, blk_q=32, blk_k=32):
         out, _, _ = T.apply(cfg, params, batch, block_kv=32)
-    finally:
-        L.set_attention_impl(None)
+    assert L.get_attention_impl() is None
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=3e-4, atol=3e-4)
 
@@ -59,11 +57,9 @@ def test_pallas_attention_grads_match():
         return T.loss(cfg, p, batch, block_kv=32)[0]
 
     g_ref = jax.grad(loss)(params)
-    try:
-        L.use_pallas_flash_attention(interpret=True, blk_q=32, blk_k=32)
+    with L.use_pallas_flash_attention(interpret=True, blk_q=32, blk_k=32):
         g_ker = jax.grad(loss)(params)
-    finally:
-        L.set_attention_impl(None)
+    assert L.get_attention_impl() is None
     for a, b in zip(jax.tree.leaves(g_ref), jax.tree.leaves(g_ker)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=2e-3, atol=2e-3)

@@ -1,0 +1,135 @@
+"""Mesh construction: the single ``make_mesh`` constructor and the thin
+aliases that used to be four copy-grown functions.
+
+Pins the consolidation contract from ``repro.launch.mesh``:
+
+  * every alias (host / hier / pipe / cp) builds a mesh BIT-IDENTICAL to
+    calling ``make_mesh`` directly with the same ordered axes — same
+    axis names, same shape, same device objects in the same order;
+  * the strict (hier/pipe/cp) divisibility errors keep their exact
+    vocabulary, the non-strict host path keeps its silent flooring;
+  * ``make_cp_mesh`` lays the cp axis out minor, so one sequence's cp
+    ring group is a run of adjacent devices.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import numpy as np
+import pytest
+
+from repro.launch.mesh import (
+    make_cp_mesh,
+    make_hier_mesh,
+    make_host_mesh,
+    make_mesh,
+    make_pipe_mesh,
+)
+
+
+def _same_mesh(a, b):
+    assert a.axis_names == b.axis_names
+    assert dict(a.shape) == dict(b.shape)
+    assert np.array_equal(a.devices, b.devices)
+
+
+# ===========================================================================
+# the shared constructor
+# ===========================================================================
+def test_make_mesh_fixed_and_free_axes():
+    m = make_mesh({"data": 8, "model": 1})
+    assert dict(m.shape) == {"data": 8, "model": 1}
+    free = make_mesh({"data": 0, "model": 1})
+    assert dict(free.shape) == {"data": jax.device_count(), "model": 1}
+    mid = make_mesh({"a": 2, "b": 0, "c": 1})
+    assert dict(mid.shape) == {"a": 2, "b": jax.device_count() // 2, "c": 1}
+
+
+def test_make_mesh_rejects_two_free_axes():
+    with pytest.raises(ValueError, match="at most one free"):
+        make_mesh({"a": 0, "b": 0})
+
+
+def test_make_mesh_oversubscription_names_the_kind():
+    with pytest.raises(ValueError, match="host mesh .* needs 16 devices"):
+        make_mesh({"data": 16, "model": 1})
+    with pytest.raises(ValueError, match="cp mesh"):
+        make_mesh({"data": 16, "cp": 2}, kind="cp")
+
+
+def test_make_mesh_strict_divisibility_error_vocabulary():
+    # the hier/pipe/cp contract: fixed axes must evenly divide the world
+    with pytest.raises(ValueError, match=r"a\*c \(3\*1\) must evenly divide "
+                                         r"the device count \(8\)"):
+        make_mesh({"a": 3, "b": 0, "c": 1})
+    with pytest.raises(ValueError, match="every widget needs"):
+        make_mesh({"a": 3, "b": 0}, unit="widget")
+    # non-strict floors instead (the legacy host-mesh behavior)
+    m = make_mesh({"a": 3, "b": 0}, strict=False)
+    assert dict(m.shape) == {"a": 3, "b": jax.device_count() // 3}
+
+
+# ===========================================================================
+# alias bit-identity (the consolidation contract)
+# ===========================================================================
+def test_host_mesh_alias_identity():
+    _same_mesh(make_host_mesh(data=8, model=1),
+               make_mesh({"data": 8, "model": 1}, strict=False))
+    _same_mesh(make_host_mesh(data=0, model=1),
+               make_mesh({"data": 0, "model": 1}, strict=False))
+    _same_mesh(make_host_mesh(data=0, model=1, pod=2),
+               make_mesh({"pod": 2, "data": 0, "model": 1}, strict=False))
+
+
+def test_hier_mesh_alias_identity():
+    _same_mesh(make_hier_mesh(nodes=2),
+               make_mesh({"node": 2, "device": 0, "model": 1},
+                         label="nodes*model", unit="node", kind="hier"))
+    assert make_hier_mesh(nodes=2).axis_names == ("node", "device", "model")
+
+
+def test_pipe_mesh_alias_identity():
+    _same_mesh(make_pipe_mesh(stages=4),
+               make_mesh({"pipe": 4, "data": 0, "model": 1},
+                         label="stages*model", unit="stage", kind="pipe"))
+
+
+def test_cp_mesh_alias_identity():
+    _same_mesh(make_cp_mesh(cp=2),
+               make_mesh({"data": 0, "cp": 2, "model": 1},
+                         label="cp*model", unit="cp group", kind="cp"))
+
+
+def test_alias_error_messages_preserved():
+    with pytest.raises(ValueError, match=r"nodes\*model \(3\*1\) must evenly "
+                                         r"divide the device count \(8\) — "
+                                         r"every node needs"):
+        make_hier_mesh(nodes=3)
+    with pytest.raises(ValueError, match=r"stages\*model .* every stage"):
+        make_pipe_mesh(stages=3)
+    with pytest.raises(ValueError, match=r"cp\*model .* every cp group"):
+        make_cp_mesh(cp=3)
+
+
+# ===========================================================================
+# cp mesh layout
+# ===========================================================================
+def test_cp_mesh_shape_and_adjacency():
+    m = make_cp_mesh(cp=2, model=1)
+    assert m.axis_names == ("data", "cp", "model")
+    assert dict(m.shape) == {"data": jax.device_count() // 2, "cp": 2,
+                             "model": 1}
+    # cp minor: each ring group is a run of ADJACENT device ids, so the
+    # per-hop KV exchange stays intra-node on real topologies
+    ids = np.vectorize(lambda d: d.id)(m.devices)[:, :, 0]
+    for g in range(ids.shape[0]):
+        group = ids[g]
+        assert list(group) == list(range(group[0], group[0] + len(group)))
+
+
+def test_cp_mesh_cp1_is_flat_data_mesh():
+    m = make_cp_mesh(cp=1, model=1)
+    assert dict(m.shape) == {"data": jax.device_count(), "cp": 1, "model": 1}
+    flat = make_host_mesh(data=0, model=1)
+    assert np.array_equal(m.devices.reshape(-1), flat.devices.reshape(-1))
