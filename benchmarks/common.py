@@ -5,14 +5,32 @@ import json
 import sys
 
 
+def check_golden(path: str, benchmark: str, config: dict, rows):
+    """Write a BENCH golden and report whether it changed on disk.
+
+    Serializes exactly as :func:`write_bench_json` always has (json,
+    indent=2, sorted keys, trailing newline), byte-compares against the
+    existing file FIRST, then writes.  Returns ``(path, status)`` with
+    status ``'byte-identical'`` | ``'changed'`` | ``'created'`` — the
+    golden-anchor discipline every sweep reports in its own output
+    (CI's ``git diff --exit-code`` on BENCH_*.json is the enforcement;
+    this makes the verdict visible without git)."""
+    payload = {"benchmark": benchmark, "config": config, "rows": rows}
+    new = (json.dumps(payload, indent=2, sort_keys=True) + "\n").encode()
+    try:
+        with open(path, "rb") as f:
+            status = ("byte-identical" if f.read() == new else "changed")
+    except FileNotFoundError:
+        status = "created"
+    with open(path, "wb") as f:
+        f.write(new)
+    return path, status
+
+
 def write_bench_json(path: str, benchmark: str, config: dict, rows):
     """Machine-readable baseline for regression tracking (CI artifacts,
     cross-PR diffs) — the shared payload schema of BENCH_*.json files."""
-    payload = {"benchmark": benchmark, "config": config, "rows": rows}
-    with open(path, "w") as f:
-        json.dump(payload, f, indent=2, sort_keys=True)
-        f.write("\n")
-    return path
+    return check_golden(path, benchmark, config, rows)[0]
 
 
 def emit(rows, header=None, file=sys.stdout):

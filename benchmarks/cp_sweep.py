@@ -187,8 +187,8 @@ def validate(rows):
 
 
 def emit_json(rows, path=BENCH_JSON):
-    from benchmarks.common import write_bench_json
-    return write_bench_json(
+    from benchmarks.common import check_golden
+    return check_golden(
         path, "cp_sweep",
         {"world": WORLD, "minibs": MINIBS, "max_tokens": MAX_TOKENS,
          "seeds": SEEDS, "max_lens": list(MAX_LENS), "skews": list(SKEWS),
@@ -214,8 +214,8 @@ def main():
     from benchmarks.common import emit
     rows = run()
     emit(rows)
-    path = emit_json(rows)
-    print(f"# wrote {path}")
+    path, status = emit_json(rows)
+    print(f"# wrote {path} ({status})")
     print(f"# wrote sample cp ring (cp=4, 8x-median dominant) trace "
           f"{_write_sample_trace()}")
     msgs = validate(rows)

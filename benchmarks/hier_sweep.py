@@ -129,8 +129,8 @@ def validate(rows):
 
 
 def emit_json(rows, path=BENCH_JSON):
-    from benchmarks.common import write_bench_json
-    return write_bench_json(
+    from benchmarks.common import check_golden
+    return check_golden(
         path, "hier_sweep",
         {"devices_per_node": DEVICES_PER_NODE,
          "nodes": list(NODES), "minibs": MINIBS,
@@ -144,8 +144,8 @@ def main():
     from benchmarks.common import emit
     rows = run()
     emit(rows)
-    path = emit_json(rows)
-    print(f"# wrote {path}")
+    path, status = emit_json(rows)
+    print(f"# wrote {path} ({status})")
     msgs = validate(rows)
     print("# validation:", "OK" if not msgs else "; ".join(msgs))
     return 0 if not msgs else 1

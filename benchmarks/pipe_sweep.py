@@ -164,8 +164,8 @@ def validate(rows, anchors):
 
 
 def emit_json(rows, anchors, path=BENCH_JSON):
-    from benchmarks.common import write_bench_json
-    return write_bench_json(
+    from benchmarks.common import check_golden
+    return check_golden(
         path, "pipe_sweep",
         {"stages": list(STAGES), "minibs": MINIBS,
          "max_tokens": MAX_TOKENS, "seeds": SEEDS,
@@ -194,8 +194,8 @@ def main():
     rows = run()
     emit(rows)
     anchors = _schedule_anchor_rows()
-    path = emit_json(rows, anchors)
-    print(f"# wrote {path}")
+    path, status = emit_json(rows, anchors)
+    print(f"# wrote {path} ({status})")
     print(f"# wrote sample 1F1B (4-stage, one_slow x2, int8) trace "
           f"{_write_sample_trace()}")
     msgs = validate(rows, anchors)

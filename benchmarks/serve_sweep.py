@@ -161,8 +161,8 @@ def validate(rows):
 
 
 def emit_json(rows, path=BENCH_JSON):
-    from benchmarks.common import write_bench_json
-    return write_bench_json(
+    from benchmarks.common import check_golden
+    return check_golden(
         path, "serve_sweep",
         {"slots": SLOTS, "requests": REQUESTS, "gen_tokens": GEN_TOKENS,
          "seeds": SEEDS, "spreads": list(SPREADS),
@@ -176,8 +176,8 @@ def main():
     from benchmarks.common import emit
     rows = run()
     emit(rows)
-    path = emit_json(rows)
-    print(f"# wrote {path}")
+    path, status = emit_json(rows)
+    print(f"# wrote {path} ({status})")
     msgs = validate(rows)
     print("# validation:", "OK" if not msgs else "; ".join(msgs))
     return 0 if not msgs else 1

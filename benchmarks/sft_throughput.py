@@ -119,8 +119,8 @@ def validate_overlap(rows):
 
 
 def emit_overlap_json(rows, path=BENCH_JSON):
-    from benchmarks.common import write_bench_json
-    return write_bench_json(
+    from benchmarks.common import check_golden
+    return check_golden(
         path, "sft_throughput_overlap",
         {"world": WORLD, "max_tokens": MAX_TOKENS,
          "seeds": SEEDS, "sim_overlap_fraction": 0.0},
@@ -158,8 +158,8 @@ def main():
     orows = run_overlap()
     emit(orows)
     msgs += validate_overlap(orows)
-    path = emit_overlap_json(orows)
-    print(f"# wrote {path}")
+    path, status = emit_overlap_json(orows)
+    print(f"# wrote {path} ({status})")
     print("# validation:", "OK" if not msgs else "; ".join(msgs))
     return 0 if not msgs else 1
 

@@ -253,8 +253,8 @@ def validate(rows):
 
 
 def emit_json(rows, path=BENCH_JSON):
-    from benchmarks.common import write_bench_json
-    return write_bench_json(
+    from benchmarks.common import check_golden
+    return check_golden(
         path, "timeline_sweep",
         {"devices_per_node": DEVICES_PER_NODE, "nodes": list(NODES),
          "minibs": MINIBS, "max_tokens": MAX_TOKENS, "seeds": SEEDS,
@@ -275,8 +275,8 @@ def main():
     rows = hier_rows + pt_rows
     emit(hier_rows)
     emit(pt_rows)
-    path = emit_json(rows)
-    print(f"# wrote {path}")
+    path, status = emit_json(rows)
+    print(f"# wrote {path} ({status})")
     if sample is not None:
         from repro.sim.trace import write_trace
         print(f"# wrote sample trace "

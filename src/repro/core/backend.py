@@ -86,6 +86,7 @@ import jax.numpy as jnp
 
 from repro.balance.cost import DeviceProfile
 from repro.core import odc
+from repro.obs import metrics as obs_metrics
 from repro.sim.timeline import (
     CONTEXT_RING,
     INDEPENDENT,
@@ -135,6 +136,118 @@ class CommBackend:
         """Legacy string view of the scheduling policy."""
         return self.policy.name
 
+    # -- comm-byte accounting (repro.obs) -----------------------------------
+    # One volume model serves both sides of the seam: the executable
+    # primitives record through ``_record_traced`` (at jit trace time,
+    # into the per-step ledger) and the simulator cost hooks record
+    # through ``_sim_record_layer`` / the push and ring-hop hooks
+    # (immediately), all via ``comm_volume`` — so a simulated and a real
+    # run of one config emit the SAME counter names:
+    #
+    #   comm.messages / comm.bytes_logical / comm.bytes_wire
+    #       {backend=<name>, op=gather|scatter|push|ring_hop,
+    #        tier=flat|intra|inter}
+    #   comm.message_bytes (histogram, log2 buckets), same labels
+    #
+    # Everything below is pure addition on the side: no recording call
+    # feeds back into gathered values or simulated float arithmetic, and
+    # with no registry active every site returns immediately.
+
+    def wire_factor(self, tier: str) -> float:
+        """Wire bytes per logical byte on ``tier`` (compression ratio)."""
+        return 1.0
+
+    def comm_volume(self, op: str, shard_bytes: float, world: int,
+                    group: Optional[int] = None):
+        """``[(tier, messages, logical_bytes, wire_bytes)]`` for moving one
+        ``shard_bytes`` shard set with this backend on a ``world``-wide
+        axis (``group`` = intra tier width for two-tier backends).
+
+        Base model is the flat p2p ring: ``world - 1`` hops, each carrying
+        one shard — ``(world-1)/world`` of the full tensor in total.
+        """
+        if world <= 1:
+            return []
+        logical = (world - 1) * shard_bytes
+        return [("flat", world - 1, logical,
+                 logical * self.wire_factor("flat"))]
+
+    def record_comm(self, op: str, shard_bytes: float, *, world: int,
+                    group: Optional[int] = None, scale: float = 1.0,
+                    per_step: bool = False):
+        """Record one shard-set move into the active registry (a no-op
+        without one).  ``per_step=True`` routes through the trace-time
+        ledger (``Counter.inc_per_step``) — for sites that run inside a
+        compiled program and fire once per trace, not once per step."""
+        reg = obs_metrics.active()
+        if reg is None:
+            return
+        for tier, msgs, logical, wire in self.comm_volume(
+                op, shard_bytes, world, group):
+            labels = dict(backend=self.name, op=op, tier=tier)
+            n = reg.counter("comm.messages", **labels)
+            bl = reg.counter("comm.bytes_logical", **labels)
+            bw = reg.counter("comm.bytes_wire", **labels)
+            h = reg.histogram("comm.message_bytes", **labels)
+            msg_bytes = wire / msgs if msgs else 0.0
+            if per_step:
+                n.inc_per_step(msgs * scale)
+                bl.inc_per_step(logical * scale)
+                bw.inc_per_step(wire * scale)
+                h.observe_per_step(msg_bytes, msgs * scale)
+            else:
+                n.inc(msgs * scale)
+                bl.inc(logical * scale)
+                bw.inc(wire * scale)
+                h.observe(msg_bytes, msgs * scale)
+
+    def _axis_sizes(self, axis_name: AxisNames):
+        """``(world, group)`` of the sharding axes, readable only inside a
+        shard_map trace; ``(0, None)`` outside one (recording skipped)."""
+        try:
+            return odc.axis_size(axis_name), None
+        except Exception:
+            return 0, None
+
+    def _record_traced(self, op: str, x, axis_name: AxisNames, *,
+                       full: bool = False):
+        """Trace-time accounting for one executable primitive: called on
+        the per-device view inside shard_map, so ``x`` is the local shard
+        (or, with ``full=True``, the full-size tensor — the gradient
+        cotangent a scatter-accumulate consumes)."""
+        if obs_metrics.active() is None:
+            return
+        world, group = self._axis_sizes(axis_name)
+        if world <= 1:
+            return
+        nbytes = float(x.size) * x.dtype.itemsize
+        shard = nbytes / world if full else nbytes
+        self.record_comm(op, shard, world=world, group=group, per_step=True)
+
+    def _sim_group(self, comm_model, devices: int) -> Optional[int]:
+        """The intra-tier width the simulator models (None = flat)."""
+        return None
+
+    def _sim_record_layer(self, comm_model, devices: int):
+        """Simulator-side twin of ``_record_traced``: one per-layer shard
+        set gathered + scattered, recorded when a cost hook prices it."""
+        reg = obs_metrics.active()
+        if reg is None or devices <= 1:
+            return
+        shard = comm_model.layer_param_bytes / devices
+        group = self._sim_group(comm_model, devices)
+        self.record_comm("gather", shard, world=devices, group=group)
+        self.record_comm("scatter", shard, world=devices, group=group)
+
+    def _sim_record_push(self, comm_model, devices: int, layers: int):
+        reg = obs_metrics.active()
+        if reg is None or devices <= 1 or layers <= 0:
+            return
+        shard = comm_model.layer_param_bytes / devices
+        self.record_comm("push", shard, world=devices,
+                         group=self._sim_group(comm_model, devices),
+                         scale=float(layers))
+
     # -- executable primitives (inside shard_map) ---------------------------
     def gather(self, x, axis_name: AxisNames, *,
                device_profile: Optional[DeviceProfile] = None):
@@ -160,11 +273,13 @@ class CommBackend:
                                  device_profile=device_profile)
 
         def _g(x):
+            self._record_traced("gather", x, axis_name)
             if dim == 0:
                 return g_fn(x)
             return jnp.moveaxis(g_fn(jnp.moveaxis(x, dim, 0)), 0, dim)
 
         def _s(y):
+            self._record_traced("scatter", y, axis_name, full=True)
             if dim == 0:
                 return s_fn(y)
             return jnp.moveaxis(s_fn(jnp.moveaxis(y, dim, 0)), 0, dim)
@@ -210,7 +325,11 @@ class CommBackend:
         stalls for it is ``push_blocks_trainer``."""
         if layers <= 0:
             return 0.0
-        return layers * self.layer_comm_time(comm_model, devices)
+        self._sim_record_push(comm_model, devices, layers)
+        # price through layer_comm_time WITHOUT its gather/scatter
+        # recording — these bytes are a push, accounted just above
+        with obs_metrics.suppressed():
+            return layers * self.layer_comm_time(comm_model, devices)
 
     # -- hardware realization (Pallas one-sided remote DMA) -----------------
     #: whether repro.kernels carries a one-sided remote-DMA realization of
@@ -294,6 +413,13 @@ class CollectiveBackend(CommBackend):
     policy = LOCKSTEP
     push_blocks_trainer = True  # a fused broadcast is a global barrier
 
+    def comm_volume(self, op, shard_bytes, world, group=None):
+        # same logical bytes as the ring, fused into ONE collective launch
+        if world <= 1:
+            return []
+        logical = (world - 1) * shard_bytes
+        return [("flat", 1, logical, logical * self.wire_factor("flat"))]
+
     def gather(self, x, axis_name, *, device_profile=None):
         return odc.collective_gather(x, axis_name)
 
@@ -301,6 +427,7 @@ class CollectiveBackend(CommBackend):
         return odc.collective_scatter(y, axis_name)
 
     def layer_comm_time(self, comm_model, devices):
+        self._sim_record_layer(comm_model, devices)
         return comm_model.layer_comm_time(devices, False)
 
 
@@ -327,6 +454,7 @@ class ODCBackend(CommBackend):
         return ops.odc_scatter_accumulate(y, axis_name, **kw)
 
     def layer_comm_time(self, comm_model, devices):
+        self._sim_record_layer(comm_model, devices)
         return comm_model.layer_comm_time(devices, True)
 
 
@@ -383,6 +511,40 @@ class HierBackend(CommBackend):
         inter = ax[:-1] if len(ax) > 2 else ax[0]
         return inter, ax[-1]
 
+    def _axis_sizes(self, axis_name):
+        inter, intra = self.split_axes(axis_name)
+        try:
+            g = odc.axis_size(intra)
+            if inter is None:  # single-tier leaf: one intra collective
+                return g, g
+            return g * odc.axis_size(inter), g
+        except Exception:
+            return 0, None
+
+    def _sim_group(self, comm_model, devices):
+        return min(comm_model.devices_per_node, devices)
+
+    def comm_volume(self, op, shard_bytes, world, group=None):
+        """Two-tier split: one fused intra collective per move plus
+        ``n - 1`` node-level p2p hops, where ``n = world / group`` nodes
+        each hold a ``group``-shard chunk.  ``group >= world`` (or no
+        group) degenerates to a single intra-tier collective — the 1-D
+        leaf / single-node path."""
+        if world <= 1:
+            return []
+        g = group or world
+        if g >= world:
+            logical = (world - 1) * shard_bytes
+            return [("intra", 1, logical,
+                     logical * self.wire_factor("intra"))]
+        n = world // g
+        intra = (g - 1) * shard_bytes  # this node's chunk, minus my shard
+        inter = (n - 1) * g * shard_bytes  # the other nodes' chunks
+        return [
+            ("intra", 1, intra, intra * self.wire_factor("intra")),
+            ("inter", n - 1, inter, inter * self.wire_factor("inter")),
+        ]
+
     def _node_profile(self, device_profile, inter: AxisNames,
                       intra: str) -> Optional[DeviceProfile]:
         if device_profile is None:
@@ -412,6 +574,7 @@ class HierBackend(CommBackend):
         return odc.collective_scatter(y, intra)
 
     def layer_comm_time(self, comm_model, devices):
+        self._sim_record_layer(comm_model, devices)
         cm, d = comm_model, devices
         g = min(cm.devices_per_node, d)
         if d <= g:  # single node: identical to the others' intra path
@@ -470,6 +633,14 @@ class PipeBackend(HierBackend):
     #: scale per ``odc.INT8_CHUNK`` values, vs 4 bytes uncompressed
     int8_wire_factor = (1.0 + 4.0 / odc.INT8_CHUNK) / 4.0
 
+    def wire_factor(self, tier):
+        # only the cross-stage p2p tier rides the compressed wire; the
+        # intra-stage collective stays full precision — so pipe-int8's
+        # 0.254× wire ratio shows up on tier=inter counters only
+        if self.compress and tier == "inter":
+            return self.int8_wire_factor
+        return 1.0
+
     def gather(self, x, axis_name, *, device_profile=None):
         inter, intra = self.split_axes(axis_name)
         if inter is None:  # single-tier leaf: native collective
@@ -509,6 +680,12 @@ class PipeBackend(HierBackend):
         cm = comm_model
         if devices <= 1:
             return 0.0
+        # accounting stays on the parameter shard sets the executable
+        # transport moves per layer (hier's two-tier volumes, with the
+        # int8 wire on the inter tier) — the hook's *time* prices the
+        # activation message, but the bytes counters must match what a
+        # real pipe run records through param_gather
+        self._sim_record_layer(cm, devices)
         vol = cm.layer_param_bytes * self.act_fraction
         if self.compress:
             vol *= self.int8_wire_factor
@@ -519,6 +696,7 @@ class PipeBackend(HierBackend):
         # only the cross-stage p2p bytes ride the compressed wire
         if layers <= 0:
             return 0.0
+        self._sim_record_push(comm_model, devices, layers)
         cm, d = comm_model, devices
         g = min(cm.devices_per_node, d)
         if d <= g:
@@ -582,6 +760,10 @@ class CpRingBackend(ODCBackend):
         if cp <= 1:
             return 0.0
         vol = cm.layer_param_bytes * self.kv_fraction / cp
+        # one full KV circulation = cp-1 hops of one chunk each — the
+        # same (cp-1)-message flat volume the executable ring records
+        # per _gather_seq call (op=ring_hop, tier=flat)
+        self.record_comm("ring_hop", vol, world=cp)
         return cm.latency + vol / cm.intra_bw
 
     def ring_policy(self, comm_model, cp: int) -> ContextRingPolicy:
@@ -589,6 +771,21 @@ class CpRingBackend(ODCBackend):
         if cp <= 1:
             return CONTEXT_RING  # hop term 0.0 — float-exact flat ODC
         return ContextRingPolicy(cp, self.ring_hop_time(comm_model, cp))
+
+    def record_ring_hop(self, x, axis_name: AxisNames):
+        """Executable-side twin of :meth:`ring_hop_time`'s accounting —
+        called by ``core.cp`` once per KV-block ring circulation, with
+        ``x`` the local sequence chunk each hop forwards."""
+        if obs_metrics.active() is None:
+            return
+        try:
+            cp = odc.axis_size(axis_name)
+        except Exception:
+            return
+        if cp <= 1:
+            return
+        self.record_comm("ring_hop", float(x.size) * x.dtype.itemsize,
+                         world=cp, per_step=True)
 
 
 COLLECTIVE = register_backend(CollectiveBackend())

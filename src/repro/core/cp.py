@@ -109,6 +109,8 @@ def _gather_seq(x, axis_name, gather_impl):
     """Ring-gather a (B, S_loc, ...) tensor's sequence dim over the cp
     axis -> (B, n*S_loc, ...) in ring device order, via p2p hops only."""
     xs = jnp.moveaxis(x, 1, 0)  # (S_loc, B, ...)
+    from repro.core import backend as _backend
+    _backend.CP.record_ring_hop(xs, axis_name)
     if gather_impl == "kernel":
         from repro.kernels import ops
         full = ops.odc_gather(xs, axis_name)

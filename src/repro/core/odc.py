@@ -39,6 +39,7 @@ import jax.numpy as jnp
 
 from repro import compat
 from repro.balance.cost import DeviceProfile
+from repro.obs import metrics as obs_metrics
 
 AxisNames = Union[str, Sequence[str]]
 
@@ -399,11 +400,15 @@ def prefetch_scan(body, init, params_xs, rest_xs, *, prefetch,
     # xs[l] -> shard slice of layer l+1 (mod L): the slice whose gather is
     # issued during layer l's compute.
     ahead = jax.tree.map(lambda a: jnp.roll(a, -1, axis=0), params_xs)
+    L = jax.tree_util.tree_leaves(params_xs)[0].shape[0]
 
     def wrapped(c, scanned):
         carry, cur = c
         nxt_shard, rest = scanned
-        nxt = prefetch(nxt_shard)  # issue layer l+1's gather FIRST
+        # the scan body traces ONCE but runs L times per step — scale the
+        # trace-time comm accounting so the ledger stays exact
+        with obs_metrics.trace_scale(L):
+            nxt = prefetch(nxt_shard)  # issue layer l+1's gather FIRST
         carry, y = body(carry, (cur,) + tuple(rest))
         return (carry, nxt), y
 

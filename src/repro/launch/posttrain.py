@@ -35,6 +35,8 @@ from repro.core.gspmd import GSPMDConfig, ShardingRules, make_train_step
 from repro.launch.mesh import (make_hier_mesh, make_host_mesh,
                                make_pipe_mesh)
 from repro.models import transformer as T
+from repro.obs import log as obs_log
+from repro.obs import metrics as obs_metrics
 from repro.optim import AdamWConfig, adamw_init
 from repro.posttrain import (
     ContinuousGenerationEngine, GenerationEngine, GRPOTask,
@@ -106,8 +108,14 @@ def main(argv=None):
                          "schema — open in chrome://tracing / "
                          "ui.perfetto.dev next to a simulate_posttrain "
                          "trace of the same config")
+    ap.add_argument("--metrics", default="",
+                    help="write per-step metrics snapshots (comm counters, "
+                         "staleness/buffer gauges) as JSONL; render with "
+                         "`python -m repro.launch.report`")
     ap.add_argument("--seed", type=int, default=0)
+    obs_log.add_log_args(ap)
     args = ap.parse_args(argv)
+    out = obs_log.from_args("posttrain", args)
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     comm = backends.get_backend(args.comm)
@@ -133,10 +141,10 @@ def main(argv=None):
                        pipe_stages=(args.pipe_stages
                                     if comm.name.startswith("pipe")
                                     else 0))
-    print(f"[posttrain] {cfg.name} task={args.task} mesh={dict(mesh.shape)} "
-          f"staleness={args.staleness} comm={comm.name} "
-          f"strategy={args.strategy} rollout="
-          f"{args.rollout if args.task == 'grpo' else 'loader'}")
+    out.info(f"{cfg.name} task={args.task} mesh={dict(mesh.shape)} "
+             f"staleness={args.staleness} comm={comm.name} "
+             f"strategy={args.strategy} rollout="
+             f"{args.rollout if args.task == 'grpo' else 'loader'}")
 
     step = jax.jit(make_train_step(cfg, mesh, gcfg, AdamWConfig(lr=args.lr)))
     params = T.init_params(cfg, jax.random.PRNGKey(args.seed))
@@ -187,22 +195,38 @@ def main(argv=None):
             and pusher is not None else None)
     pipe = PostTrainPipeline(task=task, step_fn=step, mesh=mesh, world=world,
                              staleness=args.staleness, pusher=pusher,
-                             trace=rec, live_engine=live)
+                             trace=rec, live_engine=live, log=out)
+
+    reg = None
+    if args.metrics:
+        reg = obs_metrics.MetricsRegistry(meta={
+            "driver": "launch.posttrain", "arch": cfg.name,
+            "task": args.task, "comm": comm.name,
+            "staleness": args.staleness, "world": world, "source": "real"})
+        reg.attach_jsonl(args.metrics)
+        obs_metrics.set_active(reg)
 
     t0 = time.time()
-    params, opt, metrics = pipe.run(args.iters, params, opt)
+    try:
+        params, opt, metrics = pipe.run(args.iters, params, opt)
+    finally:
+        if reg is not None:
+            obs_metrics.set_active(None)
+            reg.close()
     dt = time.time() - t0
     if rec is not None:
-        print(f"[posttrain] wrote trace {rec.write(args.trace)}")
+        out.always(f"wrote trace {rec.write(args.trace)}")
+    if reg is not None:
+        out.always(f"wrote metrics {args.metrics}")
     if not metrics:
-        print(f"[posttrain] done: no steps run (--iters {args.iters}); "
-              "setup OK")
+        out.always(f"done: no steps run (--iters {args.iters}); "
+                   "setup OK")
         return 0
     n = sum(m["rollouts"] for m in metrics)
-    print(f"[posttrain] done: {n} rollouts / {len(metrics)} steps in "
-          f"{dt:.1f}s  final loss={metrics[-1]['loss']:+.5f}  "
-          f"max staleness seen={pipe.buffer.max_staleness_seen}  "
-          f"pushes={pusher.pushes if pusher else 0}")
+    out.always(f"done: {n} rollouts / {len(metrics)} steps in "
+               f"{dt:.1f}s  final loss={metrics[-1]['loss']:+.5f}  "
+               f"max staleness seen={pipe.buffer.max_staleness_seen}  "
+               f"pushes={pusher.pushes if pusher else 0}")
     return 0
 
 

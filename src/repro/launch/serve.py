@@ -35,6 +35,8 @@ from repro.configs import get_config, get_reduced
 from repro.core.gspmd import GSPMDConfig, ShardingRules
 from repro.launch.mesh import make_host_mesh
 from repro.models import transformer as T
+from repro.obs import log as obs_log
+from repro.obs import metrics as obs_metrics
 from repro.posttrain.engine import ContinuousGenerationEngine, GenerationEngine
 
 
@@ -46,7 +48,7 @@ def _request_lengths(n: int, gen: int, spread: float, seed: int):
     return rng.randint(lo, gen + 1, size=n)
 
 
-def _serve_continuous(cfg, mesh, gcfg, params, args, key):
+def _serve_continuous(cfg, mesh, gcfg, params, args, key, out, reg):
     S, G = args.prompt_len, args.gen
     rec = None
     if args.trace:
@@ -64,20 +66,25 @@ def _serve_continuous(cfg, mesh, gcfg, params, args, key):
         engine.submit(np.asarray(tokens[b]), int(lens[b]))
     done = engine.run()
     total = int(sum(len(c.generated) for c in done))
-    print(f"[serve] continuous: {len(done)} requests "
-          f"({total} generated tokens) over {args.slots} slots in "
-          f"{engine.steps} decode steps")
-    print(f"[serve] kv blocks: {engine.allocator.num_blocks} x "
-          f"{engine.allocator.block_size} positions, all freed: "
-          f"{engine.allocator.free_blocks == engine.allocator.num_blocks}")
+    out.info(f"continuous: {len(done)} requests "
+             f"({total} generated tokens) over {args.slots} slots in "
+             f"{engine.steps} decode steps")
+    out.info(f"kv blocks: {engine.allocator.num_blocks} x "
+             f"{engine.allocator.block_size} positions, all freed: "
+             f"{engine.allocator.free_blocks == engine.allocator.num_blocks}")
     by_rid = {c.rid: c for c in done}
     first = by_rid.get(0)
     if first is not None:  # --requests 0: nothing was admitted or decoded
-        print(f"[serve] req 0: {len(first.generated)} tokens "
-              f"(weights v{first.weight_version}, {first.finish_reason}) "
-              f"ids: {first.generated[:16].tolist()}")
+        out.info(f"req 0: {len(first.generated)} tokens "
+                 f"(weights v{first.weight_version}, {first.finish_reason}) "
+                 f"ids: {first.generated[:16].tolist()}")
+    if reg is not None:
+        reg.gauge("serve.requests_done").set(float(len(done)))
+        reg.gauge("serve.generated_tokens").set(float(total))
+        reg.gauge("serve.decode_steps").set(float(engine.steps))
+        reg.step(0)
     if rec is not None:
-        print(f"[serve] wrote per-slot trace {rec.write(args.trace)}")
+        out.always(f"wrote per-slot trace {rec.write(args.trace)}")
     return 0
 
 
@@ -108,40 +115,70 @@ def main(argv=None):
     ap.add_argument("--trace", default="",
                     help="continuous: write the per-slot scheduled timeline "
                          "as a Chrome trace JSON")
+    ap.add_argument("--metrics", default="",
+                    help="write a metrics snapshot (engine counters, "
+                         "throughput gauges) as JSONL; render with "
+                         "`python -m repro.launch.report`")
+    obs_log.add_log_args(ap)
     args = ap.parse_args(argv)
+    out = obs_log.from_args("serve", args)
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     mesh = make_host_mesh(data=args.data_axis, model=args.model_axis)
     gcfg = GSPMDConfig(rules=ShardingRules(), block_kv=256)
     mode = "continuous" if args.continuous else "wave"
-    print(f"[serve] {cfg.name} mesh={dict(mesh.shape)} mode={mode} "
-          f"prompt={args.prompt_len} gen={args.gen}")
+    out.info(f"{cfg.name} mesh={dict(mesh.shape)} mode={mode} "
+             f"prompt={args.prompt_len} gen={args.gen}")
+
+    reg = None
+    if args.metrics:
+        reg = obs_metrics.MetricsRegistry(meta={
+            "driver": "launch.serve", "arch": cfg.name, "mode": mode,
+            "slots": args.slots, "source": "real"})
+        reg.attach_jsonl(args.metrics)
+        obs_metrics.set_active(reg)
 
     key = jax.random.PRNGKey(args.seed)
     params = T.init_params(cfg, key)
-    if args.continuous:
-        return _serve_continuous(cfg, mesh, gcfg, params, args, key)
+    try:
+        if args.continuous:
+            return _serve_continuous(cfg, mesh, gcfg, params, args, key,
+                                     out, reg)
 
-    B, S = args.batch, args.prompt_len
-    tokens = jax.random.randint(key, (B, S), 1, cfg.vocab_size)
-    extras = {}
-    if cfg.family == "audio":
-        extras["encoder_embeds"] = jax.random.normal(key, (B, S, cfg.d_model))
-    if cfg.frontend == "vision" and cfg.frontend_tokens:
-        n = min(cfg.frontend_tokens, S)
-        extras["vision_embeds"] = jax.random.normal(key, (B, n, cfg.d_model))
+        B, S = args.batch, args.prompt_len
+        tokens = jax.random.randint(key, (B, S), 1, cfg.vocab_size)
+        extras = {}
+        if cfg.family == "audio":
+            extras["encoder_embeds"] = jax.random.normal(
+                key, (B, S, cfg.d_model))
+        if cfg.frontend == "vision" and cfg.frontend_tokens:
+            n = min(cfg.frontend_tokens, S)
+            extras["vision_embeds"] = jax.random.normal(
+                key, (B, n, cfg.d_model))
 
-    engine = GenerationEngine(cfg, mesh, gcfg)
-    res = engine.generate(params, tokens, args.gen,
-                          batch_extras=extras or None)
-    print(f"[serve] prefill {B}x{S} in {res.prefill_s:.2f}s "
-          f"({B * S / max(res.prefill_s, 1e-9):.0f} tok/s)")
-    print(f"[serve] decoded {args.gen - 1} steps x {B} requests in "
-          f"{res.decode_s:.2f}s "
-          f"({B * (args.gen - 1) / max(res.decode_s, 1e-9):.1f} tok/s)")
-    out = jnp.asarray(res.generated)
-    print(f"[serve] sample output ids: {out[0, :16].tolist()}")
-    return 0
+        engine = GenerationEngine(cfg, mesh, gcfg)
+        res = engine.generate(params, tokens, args.gen,
+                              batch_extras=extras or None)
+        out.info(f"prefill {B}x{S} in {res.prefill_s:.2f}s "
+                 f"({B * S / max(res.prefill_s, 1e-9):.0f} tok/s)")
+        out.info(f"decoded {args.gen - 1} steps x {B} requests in "
+                 f"{res.decode_s:.2f}s "
+                 f"({B * (args.gen - 1) / max(res.decode_s, 1e-9):.1f} "
+                 "tok/s)")
+        ids = jnp.asarray(res.generated)
+        out.info(f"sample output ids: {ids[0, :16].tolist()}")
+        if reg is not None:
+            reg.gauge("serve.prefill_s").set(res.prefill_s)
+            reg.gauge("serve.decode_s").set(res.decode_s)
+            reg.gauge("serve.generated_tokens").set(
+                float(B * (args.gen - 1)))
+            reg.step(0)
+        return 0
+    finally:
+        if reg is not None:
+            obs_metrics.set_active(None)
+            reg.close()
+            out.always(f"wrote metrics {args.metrics}")
 
 
 if __name__ == "__main__":

@@ -40,6 +40,8 @@ from repro.launch.mesh import (
     make_pipe_mesh,
 )
 from repro.models import transformer as T
+from repro.obs import log as obs_log
+from repro.obs import metrics as obs_metrics
 from repro.optim import AdamWConfig, adamw_init
 from repro.sim.trace import TraceRecorder, maybe_span
 
@@ -133,8 +135,16 @@ def main(argv=None):
                          "timeline traces — open in chrome://tracing or "
                          "ui.perfetto.dev, or render next to a simulated "
                          "run of the same config)")
+    ap.add_argument("--metrics", default="",
+                    help="write per-step metrics snapshots (counters, "
+                         "gauges, message-size histograms) as JSONL — the "
+                         "same counter names a simulated run of this "
+                         "config emits; render with "
+                         "`python -m repro.launch.report`")
     ap.add_argument("--seed", type=int, default=0)
+    obs_log.add_log_args(ap)
     args = ap.parse_args(argv)
+    out = obs_log.from_args("train", args)
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     comm = backends.get_backend(args.comm)  # resolve aliases up front
@@ -159,9 +169,9 @@ def main(argv=None):
         mesh = make_host_mesh(data=args.data_axis, model=args.model_axis)
         rules = ShardingRules()
         world = mesh.shape["data"]
-    print(f"[train] {cfg.name} ({cfg.family}) on mesh {dict(mesh.shape)} "
-          f"strategy={args.strategy} schedule={args.schedule} "
-          f"comm={comm.name}")
+    out.info(f"{cfg.name} ({cfg.family}) on mesh {dict(mesh.shape)} "
+             f"strategy={args.strategy} schedule={args.schedule} "
+             f"comm={comm.name}")
 
     profile = None
     if args.device_profile != "none":
@@ -169,8 +179,8 @@ def main(argv=None):
         profile = make_straggler_profile(
             args.device_profile, world, slow_factor=args.slow_factor,
             seed=args.seed, jitter=args.profile_jitter)
-        print(f"[train] device profile {args.device_profile}: speeds="
-              f"{[round(s, 3) for s in profile.speeds]}")
+        out.info(f"device profile {args.device_profile}: speeds="
+                 f"{[round(s, 3) for s in profile.speeds]}")
 
     gcfg = GSPMDConfig(
         rules=rules, schedule=args.schedule, comm=comm.name,
@@ -202,10 +212,10 @@ def main(argv=None):
                                     {"params": params, "opt": opt_state})
             params, opt_state = state["params"], state["opt"]
             start_step = last
-            print(f"[train] resumed from {args.ckpt_dir} at step {last}")
+            out.info(f"resumed from {args.ckpt_dir} at step {last}")
         else:
-            print(f"[train] --resume: no checkpoint in {args.ckpt_dir!r}, "
-                  "starting fresh")
+            out.info(f"--resume: no checkpoint in {args.ckpt_dir!r}, "
+                     "starting fresh")
 
     cm = CostModel(attention_free=cfg.is_attention_free,
                    window=cfg.sliding_window)
@@ -237,38 +247,74 @@ def main(argv=None):
             "strategy": args.strategy, "schedule": args.schedule,
             "comm": comm.name, "world": world})
 
+    reg = None
+    if args.metrics:
+        reg = obs_metrics.MetricsRegistry(meta={
+            "driver": "launch.train", "arch": cfg.name,
+            "strategy": args.strategy, "schedule": args.schedule,
+            "comm": comm.name, "world": world, "source": "real"})
+        reg.attach_jsonl(args.metrics)
+        obs_metrics.set_active(reg)
+
     t_start = time.time()
     samples_done = 0
     loss = None  # no steps run yet (--steps 0 exits with a clean summary)
-    for i, step_data in enumerate(loader.steps(args.steps, skip=start_step),
-                                  start=start_step):
-        with maybe_span(rec, "host", "compute", f"build minibatch {i}"):
-            batch = build_minibatch(step_data["plan"],
-                                    step_data["sample_tokens"],
-                                    args.max_tokens, extras=extras_for(i))
-        t0 = time.time()
-        with maybe_span(rec, "trainer", "compute", f"train step {i}"):
-            with mesh:
-                params, opt_state, metrics = step_fn(params, opt_state, batch)
-            loss = float(metrics["loss"])  # blocks on the device result
-        samples_done += len(step_data["lengths"])
-        print(f"[train] step {i:4d} loss={loss:.4f} "
-              f"tokens={float(metrics['tokens']):.0f} "
-              f"M={step_data['plan'].max_microbatches} "
-              f"dt={time.time() - t0:.2f}s")
-        if args.ckpt_dir and args.save_every and (i + 1) % args.save_every == 0:
-            with maybe_span(rec, "host", "push", f"checkpoint step {i + 1}"):
-                save_checkpoint(args.ckpt_dir, i + 1,
-                                {"params": params, "opt": opt_state})
+    try:
+        for i, step_data in enumerate(
+                loader.steps(args.steps, skip=start_step),
+                start=start_step):
+            with maybe_span(rec, "host", "compute", f"build minibatch {i}"):
+                batch = build_minibatch(step_data["plan"],
+                                        step_data["sample_tokens"],
+                                        args.max_tokens,
+                                        extras=extras_for(i))
+            t0 = time.time()
+            with maybe_span(rec, "trainer", "compute", f"train step {i}"):
+                # program scope: a retrace (new batch shapes) REPLACES the
+                # step program's per-step comm ledger instead of stacking
+                # on the stale one
+                with obs_metrics.program("train_step"):
+                    with mesh:
+                        params, opt_state, metrics = step_fn(
+                            params, opt_state, batch)
+                loss = float(metrics["loss"])  # blocks on the device result
+            dt_step = time.time() - t0
+            samples_done += len(step_data["lengths"])
+            if reg is not None:
+                reg.gauge("train.loss").set(loss)
+                reg.gauge("train.step_s").set(dt_step)
+                reg.counter("train.tokens").inc(float(metrics["tokens"]))
+                reg.counter("train.samples").inc(
+                    float(len(step_data["lengths"])))
+                reg.step(i)
+                if rec is not None:
+                    rec.count("comm wire bytes",
+                              reg.total("comm.bytes_wire"))
+            out.step(i, f"step {i:4d} loss={loss:.4f} "
+                        f"tokens={float(metrics['tokens']):.0f} "
+                        f"M={step_data['plan'].max_microbatches} "
+                        f"dt={dt_step:.2f}s")
+            if args.ckpt_dir and args.save_every \
+                    and (i + 1) % args.save_every == 0:
+                with maybe_span(rec, "host", "push",
+                                f"checkpoint step {i + 1}"):
+                    save_checkpoint(args.ckpt_dir, i + 1,
+                                    {"params": params, "opt": opt_state})
+    finally:
+        if reg is not None:
+            obs_metrics.set_active(None)
+            reg.close()
     dt = time.time() - t_start
     if rec is not None:
-        print(f"[train] wrote trace {rec.write(args.trace)}")
+        out.always(f"wrote trace {rec.write(args.trace)}")
+    if reg is not None:
+        out.always(f"wrote metrics {args.metrics}")
     if loss is None:
-        print("[train] done: no training steps run (--steps "
-              f"{args.steps}); setup OK")
+        out.always("done: no training steps run (--steps "
+                   f"{args.steps}); setup OK")
         return 0
-    print(f"[train] done: {samples_done} samples in {dt:.1f}s "
-          f"({samples_done / dt:.2f} samples/s) final loss={loss:.4f}")
+    out.always(f"done: {samples_done} samples in {dt:.1f}s "
+               f"({samples_done / dt:.2f} samples/s) final loss={loss:.4f}")
     return 0
 
 

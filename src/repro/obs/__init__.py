@@ -1,0 +1,12 @@
+"""Observability layer: metrics registry, comm-byte accounting glue,
+run logging, and sim-vs-real divergence reports.
+
+Stdlib-only by design — ``repro.core`` and ``repro.sim`` record into it,
+so it must not import them (``divergence`` operates on already-written
+chrome-trace dicts, not live Timeline objects).
+"""
+from repro.obs import divergence, log, metrics
+from repro.obs.log import RunLog
+from repro.obs.metrics import MetricsRegistry
+
+__all__ = ["metrics", "log", "divergence", "MetricsRegistry", "RunLog"]

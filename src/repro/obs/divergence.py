@@ -1,0 +1,213 @@
+"""Sim-vs-real trace divergence: align a measured run against its
+simulation and boil the gap down to per-cost-hook calibration scalars.
+
+Both sides of the comparison are *chrome-trace dicts* — what
+``repro.sim.trace.chrome_trace`` returns and ``read_trace`` loads — so
+this module stays stdlib-only (it never touches a live ``Timeline``).
+The schema contract that makes alignment possible: sim and real traces
+share one event-kind vocabulary (``compute``/``decode``/``comm``/
+``barrier``/``gate``/``push`` in ``cat``), lane names ride in the
+``thread_name`` metadata, and ``otherData`` carries ``makespan_s`` plus
+the per-lane ``idle_attribution``.
+
+The headline output is ``calibration``: for each simulator cost hook,
+the scalar the sim's prices would need to be multiplied by to match
+the measured totals —
+
+======================  ==================================  ============
+hook                    evidence                            scalar
+======================  ==================================  ============
+``time_per_cost``       busy (compute+decode) seconds       real / sim
+``layer_comm_time``     comm seconds (ring events excl.)    real / sim
+``weight_push_time``    push seconds                        real / sim
+``ring_hop_time``       comm events named ``*ring*``        real / sim
+======================  ==================================  ============
+
+A hook with no simulated seconds calibrates to ``None`` (no evidence).
+Identical traces — the seeded sim-vs-sim golden in ``tests/test_obs.py``
+— produce all-zero deltas and all-1.0 scalars exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List, Optional, Tuple
+
+EVENT_KINDS = ("compute", "decode", "comm", "barrier", "gate", "push")
+BUSY_KINDS = ("compute", "decode")
+
+#: cost hook -> (event kinds it prices, name-substring filter or None)
+COST_HOOKS = {
+    "time_per_cost": (BUSY_KINDS, None),
+    "layer_comm_time": (("comm",), None),      # ring events subtracted
+    "weight_push_time": (("push",), None),
+    "ring_hop_time": (("comm",), "ring"),
+}
+
+
+def lane_names(trace: dict) -> List[str]:
+    """Lane names in tid order, from the thread_name metadata events."""
+    named: Dict[int, str] = {}
+    for ev in trace.get("traceEvents", ()):
+        if ev.get("ph") == "M" and ev.get("name") == "thread_name":
+            named[ev.get("tid", 0)] = ev.get("args", {}).get("name", "")
+    return [named[tid] for tid in sorted(named)]
+
+
+def lane_kind_totals(trace: dict) -> Dict[str, Dict[str, float]]:
+    """Per-lane, per-event-kind duration totals in seconds, from the
+    complete (``"ph": "X"``) events."""
+    names = {}
+    for ev in trace.get("traceEvents", ()):
+        if ev.get("ph") == "M" and ev.get("name") == "thread_name":
+            names[ev.get("tid", 0)] = ev.get("args", {}).get("name", "")
+    out: Dict[str, Dict[str, float]] = {}
+    for ev in trace.get("traceEvents", ()):
+        if ev.get("ph") != "X":
+            continue
+        lane = names.get(ev.get("tid", 0), f"tid{ev.get('tid', 0)}")
+        kinds = out.setdefault(lane, {k: 0.0 for k in EVENT_KINDS})
+        kind = ev.get("cat", ev.get("args", {}).get("kind", "compute"))
+        if kind not in kinds:
+            kinds[kind] = 0.0
+        kinds[kind] += ev.get("dur", 0.0) / 1e6
+    return out
+
+
+def _hook_seconds(trace: dict) -> Dict[str, float]:
+    """Seconds of evidence per cost hook (see :data:`COST_HOOKS`)."""
+    out = {hook: 0.0 for hook in COST_HOOKS}
+    for ev in trace.get("traceEvents", ()):
+        if ev.get("ph") != "X":
+            continue
+        kind = ev.get("cat", ev.get("args", {}).get("kind", ""))
+        dur = ev.get("dur", 0.0) / 1e6
+        name = ev.get("name", "")
+        for hook, (kinds, needle) in COST_HOOKS.items():
+            if kind in kinds and (needle is None or needle in name):
+                out[hook] += dur
+    # layer_comm_time prices non-ring comm; ring hops have their own hook
+    out["layer_comm_time"] -= out["ring_hop_time"]
+    return out
+
+
+@dataclasses.dataclass
+class DivergenceReport:
+    """The aligned comparison of one (real, sim) trace pair."""
+
+    real_makespan: float
+    sim_makespan: float
+    #: kind -> (real seconds, sim seconds, real - sim)
+    kind_totals: Dict[str, Tuple[float, float, float]]
+    #: lane -> kind -> (real, sim, real - sim); name-matched lanes only
+    per_lane: Dict[str, Dict[str, Tuple[float, float, float]]]
+    #: lanes present on only one side
+    real_only_lanes: List[str]
+    sim_only_lanes: List[str]
+    #: hook -> real/sim scalar (None when the sim has no such seconds)
+    calibration: Dict[str, Optional[float]]
+    #: L1 distance between the idle-attribution vectors of matched lanes
+    idle_l1: float
+
+    @property
+    def makespan_error(self) -> float:
+        """Relative makespan error ``(real - sim) / sim`` (0.0 when the
+        sim makespan is zero and the real one is too)."""
+        if self.sim_makespan == 0.0:
+            return 0.0 if self.real_makespan == 0.0 else float("inf")
+        return (self.real_makespan - self.sim_makespan) / self.sim_makespan
+
+    def render(self) -> str:
+        """Markdown rendering of the report."""
+        lines = ["## Sim-vs-real divergence", ""]
+        lines.append(f"- real makespan: {self.real_makespan:.6g} s")
+        lines.append(f"- sim makespan:  {self.sim_makespan:.6g} s")
+        lines.append(f"- makespan error: {self.makespan_error:+.3%}")
+        lines.append(f"- idle-attribution L1: {self.idle_l1:.6g} s")
+        if self.real_only_lanes:
+            lines.append(f"- lanes only in real: "
+                         f"{', '.join(self.real_only_lanes)}")
+        if self.sim_only_lanes:
+            lines.append(f"- lanes only in sim: "
+                         f"{', '.join(self.sim_only_lanes)}")
+        lines += ["", "### Cost-hook calibration (real / sim)", "",
+                  "| hook | scalar |", "|---|---|"]
+        for hook in COST_HOOKS:
+            s = self.calibration.get(hook)
+            lines.append(f"| `{hook}` | "
+                         f"{'n/a (no sim evidence)' if s is None else f'{s:.4f}'} |")
+        lines += ["", "### Per-kind totals (seconds)", "",
+                  "| kind | real | sim | delta |", "|---|---|---|---|"]
+        for kind, (r, s, d) in self.kind_totals.items():
+            lines.append(f"| {kind} | {r:.6g} | {s:.6g} | {d:+.6g} |")
+        if self.per_lane:
+            lines += ["", "### Per-lane deltas (seconds, real − sim)", ""]
+            kinds = [k for k in EVENT_KINDS]
+            lines.append("| lane | " + " | ".join(kinds) + " |")
+            lines.append("|---" * (len(kinds) + 1) + "|")
+            for lane, kt in self.per_lane.items():
+                cells = [f"{kt[k][2]:+.6g}" if k in kt else "0"
+                         for k in kinds]
+                lines.append(f"| {lane} | " + " | ".join(cells) + " |")
+        return "\n".join(lines) + "\n"
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def compare_traces(real: dict, sim: dict) -> DivergenceReport:
+    """Align a real trace against a sim trace for the same config."""
+    real_totals = lane_kind_totals(real)
+    sim_totals = lane_kind_totals(sim)
+
+    matched = [ln for ln in real_totals if ln in sim_totals]
+    per_lane = {}
+    for ln in matched:
+        row = {}
+        kinds = set(real_totals[ln]) | set(sim_totals[ln])
+        for k in sorted(kinds):
+            r = real_totals[ln].get(k, 0.0)
+            s = sim_totals[ln].get(k, 0.0)
+            row[k] = (r, s, r - s)
+        per_lane[ln] = row
+
+    kind_totals = {}
+    for k in EVENT_KINDS:
+        r = sum(t.get(k, 0.0) for t in real_totals.values())
+        s = sum(t.get(k, 0.0) for t in sim_totals.values())
+        kind_totals[k] = (r, s, r - s)
+
+    real_hooks = _hook_seconds(real)
+    sim_hooks = _hook_seconds(sim)
+    calibration = {}
+    for hook in COST_HOOKS:
+        s = sim_hooks[hook]
+        calibration[hook] = (real_hooks[hook] / s) if s > 0.0 else None
+
+    real_idle = real.get("otherData", {}).get("idle_attribution", {})
+    sim_idle = sim.get("otherData", {}).get("idle_attribution", {})
+    idle_l1 = 0.0
+    for ln in matched:
+        rv = real_idle.get(ln, {})
+        sv = sim_idle.get(ln, {})
+        for key in set(rv) | set(sv):
+            idle_l1 += abs(rv.get(key, 0.0) - sv.get(key, 0.0))
+
+    return DivergenceReport(
+        real_makespan=real.get("otherData", {}).get("makespan_s", 0.0),
+        sim_makespan=sim.get("otherData", {}).get("makespan_s", 0.0),
+        kind_totals=kind_totals,
+        per_lane=per_lane,
+        real_only_lanes=[ln for ln in real_totals if ln not in sim_totals],
+        sim_only_lanes=[ln for ln in sim_totals if ln not in real_totals],
+        calibration=calibration,
+        idle_l1=idle_l1,
+    )
+
+
+def compare_trace_files(real_path: str, sim_path: str) -> DivergenceReport:
+    with open(real_path) as f:
+        real = json.load(f)
+    with open(sim_path) as f:
+        sim = json.load(f)
+    return compare_traces(real, sim)

@@ -51,6 +51,7 @@ from repro.core.gspmd import (
 )
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
+from repro.obs import metrics as obs_metrics
 
 
 @dataclasses.dataclass
@@ -446,6 +447,9 @@ class ContinuousGenerationEngine:
                 position=req.prompt_len, last_token=first,
                 generated=[first], block_table=table,
                 admitted_step=self.steps)
+            reg = obs_metrics.active()
+            if reg is not None:
+                reg.counter("engine.admissions").inc(1.0)
 
     def _prefill_into_slot(self, s: int, req: Request) -> int:
         """B=1 prefill under the CURRENT version's params, scattered into
@@ -497,6 +501,9 @@ class ContinuousGenerationEngine:
                 finish_reason=reason, blocks=len(st.block_table)))
             self.allocator.free(st.block_table, req.rid)
             self._slots[s] = None
+            reg = obs_metrics.active()
+            if reg is not None:
+                reg.counter("engine.retirements").inc(1.0)
         self._gc_versions()
 
     # -- the decode loop ----------------------------------------------------
@@ -506,6 +513,15 @@ class ContinuousGenerationEngine:
         Returns False once the queue and all slots are empty."""
         self._retire()
         self._admit()
+        if self.trace is not None:
+            self.trace.count("queue depth", float(len(self._queue)),
+                             at=self._clock)
+        reg = obs_metrics.active()
+        if reg is not None:
+            reg.gauge("engine.queue_depth").set(float(len(self._queue)))
+            reg.gauge("engine.active_slots").set(float(self.active))
+            reg.gauge("engine.kv_free_blocks").set(
+                float(self.allocator.free_blocks))
         # a freshly admitted request whose prefill token already met its
         # budget (or hit eos) must not decode — it retires next round
         states = [(s, st) for s, st in enumerate(self._slots)
@@ -537,6 +553,8 @@ class ContinuousGenerationEngine:
                     f"req {st.request.rid} v{st.version}")
         self._clock += dt
         self.steps += 1
+        if reg is not None:
+            reg.counter("engine.decode_steps").inc(1.0)
         return True
 
     def _decode_all_versions(self, tokens, index, states):

@@ -34,6 +34,7 @@ import dataclasses
 import time
 from typing import Any, Callable, List, Optional
 
+from repro.obs import metrics as obs_metrics
 from repro.posttrain.buffer import RolloutBuffer
 from repro.sim.trace import maybe_span
 
@@ -73,6 +74,9 @@ class PostTrainPipeline:
     pusher: Optional[Any] = None
     trace: Optional[Any] = None
     live_engine: Optional[Any] = None
+    #: optional ``repro.obs.log.RunLog`` — per-step rows route through it
+    #: (quiet / --log-every thinning) instead of the bare verbose print
+    log: Optional[Any] = None
 
     def __post_init__(self):
         self.buffer = RolloutBuffer(self.staleness)
@@ -127,9 +131,10 @@ class PostTrainPipeline:
             t0 = time.time()
             with maybe_span(self.trace, "trainer", "compute",
                             f"train step {t}"):
-                with self.mesh:
-                    params, opt_state, m = self.step_fn(params, opt_state,
-                                                        batch)
+                with obs_metrics.program("posttrain_step"):
+                    with self.mesh:
+                        params, opt_state, m = self.step_fn(
+                            params, opt_state, batch)
                 loss = float(m["loss"])  # block on the device result
             self.trained = t + 1
             row = {
@@ -144,9 +149,21 @@ class PostTrainPipeline:
                 "pushes": self.pusher.pushes if self.pusher else 0,
             }
             self.metrics.append(row)
-            if verbose:
-                print(f"[posttrain] step {t:4d} loss={row['loss']:+.5f} "
-                      f"rollouts={row['rollouts']} "
-                      f"staleness={row['staleness']} "
-                      f"M={plan.max_microbatches} dt={row['dt']:.2f}s")
+            reg = obs_metrics.active()
+            if reg is not None:
+                reg.gauge("posttrain.loss").set(loss)
+                reg.gauge("posttrain.staleness").set(row["staleness"])
+                reg.gauge("posttrain.buffer_depth").set(len(self.buffer))
+                reg.gauge("posttrain.step_s").set(row["dt"])
+                reg.counter("posttrain.rollouts").inc(row["rollouts"])
+                reg.counter("posttrain.tokens").inc(row["tokens"])
+                reg.step(t)
+            msg = (f"step {t:4d} loss={row['loss']:+.5f} "
+                   f"rollouts={row['rollouts']} "
+                   f"staleness={row['staleness']} "
+                   f"M={plan.max_microbatches} dt={row['dt']:.2f}s")
+            if self.log is not None:
+                self.log.step(t, msg)
+            elif verbose:
+                print(f"[posttrain] {msg}")
         return params, opt_state, self.metrics[first_new:]

@@ -20,8 +20,9 @@ bit-identical to the trainer's (gather is exact).
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
-from typing import Any, Optional
+from typing import Any, List, Optional, Tuple
 
 import jax
 from jax.sharding import PartitionSpec as P
@@ -33,6 +34,7 @@ from repro.core.gspmd import (
 )
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
+from repro.obs import metrics as obs_metrics
 
 
 def make_weight_push(cfg: ModelConfig, mesh, gcfg: GSPMDConfig):
@@ -72,6 +74,40 @@ def make_weight_push(cfg: ModelConfig, mesh, gcfg: GSPMDConfig):
     return jax.jit(sharded)
 
 
+def push_comm_sites(cfg: ModelConfig, mesh,
+                    gcfg: GSPMDConfig) -> List[Tuple[float, int, int]]:
+    """Per-leaf ``(shard_bytes, world, group)`` of ONE full weight push —
+    the byte-accounting twin of ``make_weight_push``'s gather set.  The
+    push primitive itself carries no recording (its gather runs outside
+    ``param_gather``'s traced sites), so the driver charges
+    ``record_comm('push', ...)`` per push event from this list.  ``group``
+    is the trailing (intra-tier) axis width — two-tier backends split
+    their volume on it, flat backends ignore it."""
+    rules = gcfg.rules
+    da = rules.data if isinstance(rules.data, tuple) else (rules.data,)
+    params_shape = jax.eval_shape(
+        lambda k: T.init_params(cfg, k, gcfg.param_dtype),
+        jax.random.PRNGKey(0))
+    pspecs = param_pspecs(cfg, params_shape, rules, mesh)
+    sites: List[Tuple[float, int, int]] = []
+
+    def visit(leaf, spec):
+        dd = _data_dims(spec, da)
+        if not dd:
+            return leaf  # replicated over the FSDP axes: no push traffic
+        _, axes = dd[0]
+        world = 1
+        for a in axes:
+            world *= mesh.shape[a]
+        if world > 1:
+            nbytes = float(math.prod(leaf.shape)) * leaf.dtype.itemsize
+            sites.append((nbytes / world, world, mesh.shape[axes[-1]]))
+        return leaf
+
+    jax.tree.map(visit, params_shape, pspecs)
+    return sites
+
+
 @dataclasses.dataclass
 class WeightPusher:
     """Stateful wrapper: push + version bookkeeping for the pipeline.
@@ -89,11 +125,24 @@ class WeightPusher:
 
     def __post_init__(self):
         self._fn = make_weight_push(self.cfg, self.mesh, self.gcfg)
+        self._sites = None  # computed on first recorded push
         self.params = None
+
+    def _record_push(self):
+        """Charge one full push's comm bytes to the active registry."""
+        if obs_metrics.active() is None:
+            return
+        if self._sites is None:
+            self._sites = push_comm_sites(self.cfg, self.mesh, self.gcfg)
+        backend = B.get_backend(self.gcfg.comm)
+        for shard_bytes, world, group in self._sites:
+            backend.record_comm("push", shard_bytes, world=world,
+                                group=group)
 
     def push(self, params, version: int):
         with self.mesh:
             self.params = self._fn(params)
+        self._record_push()
         self.version = version
         self.pushes += 1
         return self.params
@@ -122,6 +171,7 @@ class WeightPusher:
             self.params = self._fn(params)
         jax.block_until_ready(self.params)
         dt = time.perf_counter() - t0
+        self._record_push()
         self.version = version
         self.pushes += 1
         engine.publish(self.params, version,

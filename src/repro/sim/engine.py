@@ -245,6 +245,22 @@ def _step_times_and_wire(plan: Plan, seqlens: Sequence[int],
     return times, cl
 
 
+def _layer_wire_bytes(backend, comm_model, devices: int) -> float:
+    """Modeled wire bytes of one per-layer gather + scatter sweep — the
+    backend's own volume model (``comm_volume``), used only to annotate
+    timelines with a cumulative-bytes counter track.  Never feeds back
+    into makespan arithmetic."""
+    if devices <= 1:
+        return 0.0
+    shard = comm_model.layer_param_bytes / devices
+    group = backend._sim_group(comm_model, devices)
+    total = 0.0
+    for op in ("gather", "scatter"):
+        for _, _, _, wire in backend.comm_volume(op, shard, devices, group):
+            total += wire
+    return total
+
+
 def simulate_minibatch(plan: Plan, seqlens: Sequence[int], *,
                        scheme: str, cfg: SimConfig = SimConfig(),
                        device_speed: Optional[Sequence[float]] = None,
@@ -295,6 +311,8 @@ def simulate_minibatch(plan: Plan, seqlens: Sequence[int], *,
                                       "scheme": backend.name,
                                       "policy": pol.name})
     makespan, finish = schedule_minibatch(tl, pol, times, cl, L)
+    tl.count("comm wire bytes", makespan,
+             L * _layer_wire_bytes(backend, cfg.comm, D))
 
     busy = [sum(ts) for ts in times]
     denom = D * makespan if makespan > 0 else 1.0
@@ -369,6 +387,7 @@ def simulate_training(steps, *, scheme: str, cfg: SimConfig = SimConfig(),
         source="sim", meta={"model": "training", "scheme": backend.name,
                             "policy": pol.name, "staleness": staleness})
 
+    step_wire = L * _layer_wire_bytes(backend, cfg.comm, D)
     if pol.name == "lockstep" or staleness <= 0:
         # fully-synchronous: a global barrier joins every device at each
         # minibatch end, so the run is the fold of per-step makespans
@@ -379,6 +398,7 @@ def simulate_training(steps, *, scheme: str, cfg: SimConfig = SimConfig(),
             barrier, _ = schedule_minibatch(
                 tl, pol, times, cl, L,
                 barrier_name=f"minibatch {t} barrier")
+            tl.count("comm wire bytes", barrier, (t + 1) * step_wire)
         return barrier
 
     # bounded-staleness: a device may start minibatch t as soon as the
@@ -393,6 +413,7 @@ def simulate_training(steps, *, scheme: str, cfg: SimConfig = SimConfig(),
             tl, pol, times, cl, L, gate=gate,
             gate_name=f"staleness gate (minibatch {t})", barrier_name=None)
         barrier[t + 1] = b
+        tl.count("comm wire bytes", b, (t + 1) * step_wire)
     return barrier[T]
 
 
@@ -585,6 +606,7 @@ def simulate_posttrain(steps, *, scheme: str = "async", comm: str = "odc",
             arrival = max(arrival, lane.t)
         gen_time.append(arrival)
         observed.append(t - v)
+        tl.count("observed staleness", arrival, float(t - v))
 
         trainer.wait(arrival, "gate", f"rollout wait (wave {t})")
         if backend.push_blocks_trainer and t > 0:
@@ -738,7 +760,7 @@ def simulate_serve(requests, *, scheme: str, slots: int, comm: str = "odc",
             place_push_event(k)
 
     if scheme == "continuous":
-        for rid in order:
+        for pos, rid in enumerate(order):
             arr, length = requests[rid]
             if barrier:
                 tent = min(max(ln.t, arr) for ln in lanes)
@@ -751,6 +773,11 @@ def simulate_serve(requests, *, scheme: str, slots: int, comm: str = "odc",
                 apply_slot_pushes(s, start)
             elif not barrier and overlap:
                 applied_slot[s] = len(push_t)
+            # queue depth at this admission: later-arriving requests
+            # already waiting when this one starts (annotation only)
+            queued = sum(1 for r2 in order[pos + 1:]
+                         if requests[r2][0] <= start)
+            tl.count("queued requests", start, float(queued))
             lane.wait(arr, "gate", f"req {rid} arrival")
             lane.advance(length * tpt, "decode", f"req {rid}")
     else:

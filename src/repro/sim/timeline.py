@@ -169,12 +169,24 @@ class Timeline:
         self.source = source
         self.meta = dict(meta or {})
         self._lanes: Dict[str, Lane] = {}
+        self._counters: Dict[str, List[Tuple[float, float]]] = {}
 
     def lane(self, name: str) -> Lane:
         ln = self._lanes.get(name)
         if ln is None:
             ln = self._lanes[name] = Lane(name)
         return ln
+
+    def count(self, track: str, t: float, value: float):
+        """Sample a counter track (cumulative wire bytes, queue depth,
+        staleness) at time ``t`` — rendered as a ``"ph": "C"`` graph
+        under the lanes in the Chrome-trace export.  Annotation-only:
+        samples never feed back into lane cursor arithmetic."""
+        self._counters.setdefault(track, []).append((float(t), float(value)))
+
+    @property
+    def counters(self) -> Dict[str, List[Tuple[float, float]]]:
+        return {k: list(v) for k, v in self._counters.items()}
 
     @property
     def lanes(self) -> List[Lane]:

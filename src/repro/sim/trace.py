@@ -64,6 +64,17 @@ def chrome_trace(timeline: Timeline, *, extra_meta: Optional[dict] = None
                 "tid": tid,
                 "args": {"kind": ev.kind},
             })
+    for track, samples in timeline.counters.items():
+        for t, value in samples:
+            # counter track ("ph": "C"): viewers render one stacked graph
+            # per (pid, name) under the thread lanes
+            events.append({
+                "name": track,
+                "ph": "C",
+                "ts": t * 1e6,
+                "pid": 0,
+                "args": {"value": value},
+            })
     other = {"source": timeline.source, **timeline.meta,
              "makespan_s": timeline.makespan,
              "idle_attribution": timeline.idle_breakdown()}
@@ -129,6 +140,12 @@ class TraceRecorder:
         """Record a point-in-time marker (a version publish, a gate that
         cleared instantly) — serialized as a Chrome-trace instant event."""
         self.timeline.lane(lane).mark(kind, name, at=self.now())
+
+    def count(self, track: str, value: float,
+              at: Optional[float] = None):
+        """Sample a counter track (cumulative wire bytes, queue depth) at
+        ``at`` (default: now) — rendered as a ``"ph": "C"`` graph."""
+        self.timeline.count(track, self.now() if at is None else at, value)
 
     def write(self, path: str, *, extra_meta: Optional[dict] = None) -> str:
         return write_trace(path, self.timeline, extra_meta=extra_meta)

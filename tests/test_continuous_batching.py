@@ -475,7 +475,7 @@ def _bench_bytes_match(module_name, golden, tmp_path):
         sys.path.pop(0)
     rows = mod.run()
     assert mod.validate(rows) == []
-    out = mod.emit_json(rows, path=str(tmp_path / golden))
+    out, _status = mod.emit_json(rows, path=str(tmp_path / golden))
     with open(out, "rb") as f:
         got = f.read()
     with open(os.path.join(REPO, "benchmarks", golden), "rb") as f:
