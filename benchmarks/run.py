@@ -24,6 +24,9 @@
   cp_sweep         (ours)               context-parallel ring + lb_token vs
                                         the best non-cp backend, max-seqlen
                                         × cp degree × long-sequence skew
+  tune_sweep       (ours)               calibrated auto-tuner vs fixed-
+                                        backend baselines vs oracle, skew ×
+                                        spread on a heterogeneous profile
   roofline         (ours)               dry-run roofline table
 
 ``python -m benchmarks.run [module ...]`` — no args runs everything.
@@ -52,6 +55,7 @@ ALL = [
     "timeline_sweep",
     "pipe_sweep",
     "cp_sweep",
+    "tune_sweep",
     "roofline",
 ]
 

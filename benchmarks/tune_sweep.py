@@ -1,0 +1,261 @@
+"""Auto-tuner sweep: tuned config vs fixed-backend baselines vs oracle.
+
+The tuner's claim: *which* backend/strategy/mesh/staleness config wins
+depends on the workload (length skew and spread) and the device profile,
+so one simulator-driven search per cell — corrected by measurement
+through the calibration loop — beats committing to any single backend
+across the grid.
+
+Grid: dominant-sequence skew (the longest sample stretched to
+``skew × median``, the cp_sweep scenario) × length spread
+(``scale_spread``, the async_sweep scenario), on a seeded heterogeneous
+one-slow profile with per-step jitter.  Per cell:
+
+  * the tuner runs its full sim → halve → validate → calibrate → re-rank
+    loop against a *sim oracle*: the same evaluator under a hidden
+    ground-truth calibration vector (a deterministic stand-in for short
+    real runs, so this golden regenerates byte-identical);
+  * the **oracle** column scores every candidate under the ground truth
+    and takes the per-cell best — the best any tuner could do;
+  * each **fixed-backend baseline** is the single config of that backend
+    family minimizing *aggregate* truth makespan across all cells (the
+    best you could do by picking one backend+config up front and never
+    retuning).
+
+Acceptance targets (checked by ``validate``):
+  * the tuned config is within 2% of the per-cell oracle in EVERY cell;
+  * tuned aggregate makespan strictly beats the best fixed-backend
+    baseline's aggregate;
+  * every fixed-backend baseline is strictly beaten in ≥2 cells;
+  * the calibration loop converges: ranking stable after ≤2 rounds in
+    every cell, and the fitted vector recovers the hidden truth;
+  * the search is cache-fast: ≥100 candidates per cell, plan-cache hit
+    rate ≥ 50% (wall-clock goes to stdout only, never into the golden).
+
+Writes ``benchmarks/BENCH_tune.json`` — a golden anchor: the CI ``tune``
+job asserts it regenerates byte-identical.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.balance import make_straggler_profile
+from repro.data import sample_lengths, scale_spread
+from repro.sim import Calibration, SimConfig
+from repro.tune import Evaluator, SimOracleValidator, enumerate_space, tune
+
+from benchmarks.sft_throughput import WORLD
+
+SAMPLES = 64
+MAX_TOKENS = 8_192
+MAX_LEN = 2_048   # rescale longalign so the skew stretch bites (the
+                  # unclipped distribution's median already sits at the
+                  # token budget, flattening the skew axis)
+SKEWS = (1.0, 8.0, 24.0)
+SPREADS = (0.5, 1.0)
+PROFILE_KIND = "one_slow"
+SLOW_FACTOR = 2.5
+PROFILE_JITTER = 0.15
+TOPK = 4
+VALIDATE_STEPS = 2
+#: the hidden ground truth the sim oracle measures with: a plausibly
+#: miscalibrated cluster (compute 12% slower than modeled, wire 35%,
+#: pushes 20%, ring hops 15%)
+TRUTH = Calibration(time_per_cost=1.12, layer_comm_time=1.35,
+                    weight_push_time=1.2, ring_hop_time=1.15)
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "BENCH_tune.json")
+
+
+def _cell_lengths(skew: float, spread: float, seed: int = 0):
+    """The cell's sample stream: longalign lengths, spread scaled around
+    the mean, then the longest sample stretched to ``skew × median``
+    (capped at the token budget so every non-cp plan stays feasible)."""
+    lens = sample_lengths("longalign", SAMPLES, seed,
+                          max_len=MAX_LEN).astype(np.int64)
+    lens = scale_spread(lens, spread)
+    lens = np.minimum(lens, MAX_TOKENS)
+    med = float(np.median(lens))
+    j = int(np.argmax(lens))
+    lens[j] = int(min(max(float(lens[j]), skew * med), MAX_TOKENS))
+    return [int(l) for l in lens]
+
+
+def _evaluator(lens, profile):
+    return Evaluator(lengths=tuple(lens), world=WORLD,
+                     max_tokens=MAX_TOKENS, profile=profile,
+                     base_cfg=SimConfig(overlap=0.0))
+
+
+def run(skews=SKEWS, spreads=SPREADS):
+    profile = make_straggler_profile(PROFILE_KIND, WORLD,
+                                     slow_factor=SLOW_FACTOR, seed=0,
+                                     jitter=PROFILE_JITTER)
+    space = enumerate_space(WORLD, mode="train", heterogeneous=True)
+    cells = [(sk, sp) for sk in skews for sp in spreads]
+
+    rows = []
+    truth_mk = {}   # (skew, spread) -> {candidate: truth makespan}
+    t_search = 0.0
+    for sk, sp in cells:
+        lens = _cell_lengths(sk, sp)
+        ev = _evaluator(lens, profile)
+        oracle_val = SimOracleValidator(truth=TRUTH, evaluator=ev,
+                                        steps=VALIDATE_STEPS)
+        t0 = time.time()
+        result = tune(space, ev, validator=oracle_val, topk=TOPK,
+                      max_rounds=3)
+        t_search += time.time() - t0
+        # the oracle: every candidate priced under the hidden truth
+        scores = {c: ev.score(c, TRUTH) for c in space}
+        truth_mk[(sk, sp)] = scores
+        oracle_cand = min(scores, key=scores.get)
+        tuned_s = scores[result.winner]
+        cal = result.calibration.as_dict()
+        rows.append({
+            "scenario": "cell", "skew": sk, "spread": sp,
+            "candidates": result.candidates_total,
+            "tuned": result.winner.describe(),
+            "tuned_makespan_s": tuned_s,
+            "oracle": oracle_cand.describe(),
+            "oracle_makespan_s": scores[oracle_cand],
+            "vs_oracle_pct": 100 * (tuned_s / scores[oracle_cand] - 1),
+            "rounds": result.rounds,
+            "ranking_stable": result.ranking_stable,
+            "cal_time_per_cost": cal["time_per_cost"],
+            "cal_layer_comm_time": cal["layer_comm_time"],
+            "plan_cache_hit_pct": 100 * result.plan_cache["hit_rate"],
+            "eval_cache_hits": result.eval_cache["hits"],
+        })
+
+    # fixed-backend baselines: per backend family, the single config
+    # minimizing aggregate truth makespan across all cells
+    families = sorted({c.backend for c in space})
+    fixed = {}
+    for fam in families:
+        fam_cands = [c for c in space if c.backend == fam]
+        fixed[fam] = min(fam_cands, key=lambda c: sum(
+            truth_mk[cell][c] for cell in cells))
+    for fam in families:
+        cand = fixed[fam]
+        for sk, sp in cells:
+            rows.append({
+                "scenario": "baseline", "skew": sk, "spread": sp,
+                "backend": fam, "config": cand.describe(),
+                "makespan_s": truth_mk[(sk, sp)][cand],
+            })
+
+    tuned_total = sum(r["tuned_makespan_s"] for r in rows
+                      if r["scenario"] == "cell")
+    for fam in families:
+        total = sum(truth_mk[cell][fixed[fam]] for cell in cells)
+        rows.append({
+            "scenario": "aggregate", "backend": fam,
+            "config": fixed[fam].describe(), "total_makespan_s": total,
+            "tuned_total_makespan_s": tuned_total,
+            "tuned_speedup_pct": 100 * (total / tuned_total - 1),
+        })
+    print(f"# search wall-clock: {t_search:.2f}s over {len(cells)} cells "
+          f"x {len(space)} candidates")
+    return rows
+
+
+def validate(rows):
+    msgs = []
+    cells = [r for r in rows if r["scenario"] == "cell"]
+    base = {(r["backend"], r["skew"], r["spread"]): r["makespan_s"]
+            for r in rows if r["scenario"] == "baseline"}
+    agg = {r["backend"]: r for r in rows if r["scenario"] == "aggregate"}
+    families = sorted(agg)
+
+    # 1. within 2% of the per-cell oracle in EVERY cell
+    for r in cells:
+        if r["tuned_makespan_s"] > 1.02 * r["oracle_makespan_s"]:
+            msgs.append(f"skew={r['skew']}/spread={r['spread']}: tuned "
+                        f"{r['tuned_makespan_s']:.4f} more than 2% over "
+                        f"oracle {r['oracle_makespan_s']:.4f}")
+        # 2. calibration loop converged fast
+        if r["rounds"] > 2 or not r["ranking_stable"]:
+            msgs.append(f"skew={r['skew']}/spread={r['spread']}: ranking "
+                        f"not stable within 2 rounds ({r['rounds']})")
+        if abs(r["cal_time_per_cost"] - TRUTH.time_per_cost) > 1e-6 or \
+                abs(r["cal_layer_comm_time"] - TRUTH.layer_comm_time) > 1e-5:
+            msgs.append(f"skew={r['skew']}/spread={r['spread']}: fitted "
+                        f"calibration did not recover the truth vector")
+        # 5. the search is cache-fast
+        if r["candidates"] < 100:
+            msgs.append(f"search space only {r['candidates']} candidates")
+        if r["plan_cache_hit_pct"] < 50:
+            msgs.append(f"skew={r['skew']}/spread={r['spread']}: plan "
+                        f"cache hit rate {r['plan_cache_hit_pct']:.0f}% "
+                        f"below 50%")
+        if r["rounds"] >= 2 and r["eval_cache_hits"] <= 0:
+            msgs.append(f"skew={r['skew']}/spread={r['spread']}: stable "
+                        f"round re-ranked without any eval-cache hits")
+
+    # the grid is non-degenerate: retuning per cell changes the answer,
+    # and at least one cell needs the measured correction (the identity
+    # ranking was wrong until the calibration round fixed it)
+    winners = {r["tuned"] for r in cells}
+    if len(winners) < 2:
+        msgs.append(f"every cell tuned to the same config {winners} — "
+                    f"the grid no longer exercises the tuner")
+    if cells and not any(r["rounds"] >= 2 for r in cells):
+        msgs.append("no cell needed a calibration round — the truth "
+                    "vector no longer changes any ranking")
+
+    # 3. aggregate: tuned beats the best fixed-backend baseline
+    tuned_total = cells and sum(r["tuned_makespan_s"] for r in cells)
+    best_fixed = min(agg[f]["total_makespan_s"] for f in families)
+    if not tuned_total < best_fixed:
+        msgs.append(f"tuned aggregate {tuned_total:.4f} does not beat "
+                    f"best fixed backend {best_fixed:.4f}")
+
+    # 4. every fixed-backend baseline strictly beaten in >= 2 cells,
+    #    and tuned never loses a cell to the best fixed config by > 2%
+    for fam in families:
+        wins = sum(1 for r in cells
+                   if r["tuned_makespan_s"]
+                   < base[(fam, r["skew"], r["spread"])] - 1e-12)
+        if wins < 2:
+            msgs.append(f"fixed {fam} baseline beaten in only {wins} "
+                        f"cells (need >= 2)")
+    for r in cells:
+        best_cell_fixed = min(base[(f, r["skew"], r["spread"])]
+                              for f in families)
+        if r["tuned_makespan_s"] > 1.02 * best_cell_fixed:
+            msgs.append(f"skew={r['skew']}/spread={r['spread']}: tuned "
+                        f"loses to best fixed {best_cell_fixed:.4f} by "
+                        f">2%")
+    return msgs
+
+
+def emit_json(rows, path=BENCH_JSON):
+    from benchmarks.common import check_golden
+    return check_golden(
+        path, "tune_sweep",
+        {"world": WORLD, "samples": SAMPLES, "max_tokens": MAX_TOKENS,
+         "max_len": MAX_LEN,
+         "skews": list(SKEWS), "spreads": list(SPREADS),
+         "profile": PROFILE_KIND, "slow_factor": SLOW_FACTOR,
+         "profile_jitter": PROFILE_JITTER, "topk": TOPK,
+         "validate_steps": VALIDATE_STEPS, "truth": TRUTH.as_dict(),
+         "sim_overlap_fraction": 0.0},
+        rows)
+
+
+def main():
+    from benchmarks.common import emit
+    rows = run()
+    emit(rows)
+    path, status = emit_json(rows)
+    print(f"# wrote {path} ({status})")
+    msgs = validate(rows)
+    print("# validation:", "OK" if not msgs else "; ".join(msgs))
+    return 0 if not msgs else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -4,6 +4,7 @@ from repro.balance.cost import (  # noqa: F401
     get_compute_costs,
     make_straggler_profile,
 )
+from repro.balance.cache import PlanCache, lengths_key  # noqa: F401
 from repro.balance.kk import karmarkar_karp  # noqa: F401
 from repro.balance.strategies import (  # noqa: F401
     STRATEGIES,

@@ -1,0 +1,71 @@
+"""Memoized plan construction for repeated balancing of the same lengths.
+
+The auto-tuner scores hundreds of candidate configs over one fixed sample
+stream; most candidates share (strategy, world, max_tokens, cp, profile),
+so the balancing work — KK partitions, packing — repeats verbatim.  A
+``PlanCache`` keys ``make_plan`` calls on every input that can change the
+output and returns the *same* ``Plan`` object on a hit (plans are treated
+as immutable by every consumer; the simulator never mutates assignments).
+
+The key hashes the lengths tuple rather than carrying it, so a cache over
+a long stream of minibatch slices stays small; the full inputs are kept
+per entry to rule out hash collisions by equality check.  Hit/miss
+counters feed the tuner's reported cache hit-rate.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+from repro.balance.cost import CostModel, DEFAULT_COST_MODEL, DeviceProfile
+from repro.balance.strategies import Plan, make_plan
+
+
+def lengths_key(seqlens: Sequence[int]) -> Tuple[int, int, int]:
+    """A cheap stable digest of a lengths sequence: (n, sum, hash).
+
+    Collisions are resolved by the cache's equality check on the stored
+    tuple, so the digest only needs to be *stable*, not perfect."""
+    t = tuple(int(l) for l in seqlens)
+    return (len(t), sum(t), hash(t))
+
+
+@dataclasses.dataclass
+class PlanCache:
+    """Memoizes ``balance.make_plan`` across identical balancing calls."""
+
+    hits: int = 0
+    misses: int = 0
+    _entries: Dict[tuple, Tuple[tuple, Plan]] = dataclasses.field(
+        default_factory=dict, repr=False)
+
+    def get(self, seqlens: Sequence[int], world_size: int, max_tokens: int,
+            *, strategy: str = "lb_mini",
+            cost_model: CostModel = DEFAULT_COST_MODEL,
+            profile: Optional[DeviceProfile] = None, cp: int = 1) -> Plan:
+        """``make_plan`` with memoization; same signature, same result."""
+        lens = tuple(int(l) for l in seqlens)
+        key = (lengths_key(lens), world_size, max_tokens, strategy,
+               cost_model, profile, cp)
+        hit = self._entries.get(key)
+        if hit is not None and hit[0] == lens:
+            self.hits += 1
+            return hit[1]
+        self.misses += 1
+        plan = make_plan(lens, world_size, max_tokens, strategy=strategy,
+                         cost_model=cost_model, profile=profile, cp=cp)
+        self._entries[key] = (lens, plan)
+        return plan
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self.hits = 0
+        self.misses = 0

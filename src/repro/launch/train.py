@@ -142,9 +142,19 @@ def main(argv=None):
                          "config emits; render with "
                          "`python -m repro.launch.report`")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--config", default="",
+                    help="tune_result.json from `python -m "
+                         "repro.launch.tune`: launches the tuner's winning "
+                         "config (comm/strategy/mesh/minibatch knobs); "
+                         "explicit CLI flags still override the file")
     obs_log.add_log_args(ap)
+    from repro.tune.config import apply_config_arg
+    tuned = apply_config_arg(ap, argv, mode="train")
     args = ap.parse_args(argv)
     out = obs_log.from_args("train", args)
+    if tuned is not None:
+        out.info(f"--config {args.config}: launching tuned winner "
+                 f"{tuned['winner']} (CLI flags override)")
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     comm = backends.get_backend(args.comm)  # resolve aliases up front

@@ -1,0 +1,164 @@
+"""Auto-tuner CLI: search the config space, validate, emit the winner.
+
+Given a workload sketch — a dataset length distribution (or a lengths
+file) plus an optional device profile — enumerate every feasible
+{backend × strategy × mesh × plan size × staleness × overlap} config,
+score them all with the calibrated timeline engine under successive
+halving, validate the survivors (short real runs, or a seeded sim
+oracle), re-fit the calibration from the real-vs-sim divergence and
+re-rank until stable, then write ``tune_result.json``:
+
+  PYTHONPATH=src python -m repro.launch.tune --dataset longalign \
+      --world 8 --samples 64 --device-profile one_slow \
+      --out tune_result.json
+  PYTHONPATH=src python -m repro.launch.train --config tune_result.json
+
+``--validator oracle`` (default) measures against the same simulator
+under a hidden ground-truth calibration — deterministic, no devices
+needed (CI / benchmarks).  ``--validator real`` drives short
+``launch.train`` / ``launch.posttrain`` runs with ``--trace`` and fits
+from their recorders.  ``--validator none`` is a single uncalibrated
+sweep.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from repro.balance.cost import DEFAULT_COST_MODEL
+from repro.data import sample_lengths
+from repro.obs import log as obs_log
+from repro.sim.engine import Calibration, SimConfig
+from repro.tune import (
+    Evaluator,
+    RealRunValidator,
+    SimOracleValidator,
+    enumerate_space,
+    tune,
+    write_tune_result,
+)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="train",
+                    choices=("train", "posttrain"))
+    ap.add_argument("--world", type=int, default=8)
+    ap.add_argument("--dataset", default="longalign",
+                    choices=("longalign", "swesmith", "aime"),
+                    help="length distribution of the workload sketch")
+    ap.add_argument("--samples", type=int, default=64,
+                    help="samples drawn for the sketch stream (sliced "
+                         "into minibatches per candidate plan size)")
+    ap.add_argument("--max-len", type=int, default=0,
+                    help="rescale the length distribution (0 = dataset "
+                         "default)")
+    ap.add_argument("--lengths-file", default="",
+                    help="JSON list of sample lengths; overrides "
+                         "--dataset/--samples")
+    ap.add_argument("--max-tokens", type=int, default=512,
+                    help="microbatch token budget candidates plan under")
+    ap.add_argument("--device-profile", default="none",
+                    choices=("none", "homogeneous", "one_slow", "bimodal",
+                             "uniform"))
+    ap.add_argument("--slow-factor", type=float, default=2.0)
+    ap.add_argument("--profile-jitter", type=float, default=0.0)
+    ap.add_argument("--mb-choices", default="2,4",
+                    help="comma list of minibatch-per-device plan sizes")
+    ap.add_argument("--staleness-choices", default="0,1,2")
+    ap.add_argument("--max-pipe-stages", type=int, default=None,
+                    help="cap the pipe-stage axis (0 disables pipe)")
+    ap.add_argument("--max-cp", type=int, default=None,
+                    help="cap the cp-degree axis (0 disables cp)")
+    ap.add_argument("--topk", type=int, default=4,
+                    help="survivors validated per calibration round")
+    ap.add_argument("--rounds", type=int, default=3,
+                    help="max sim->measure->calibrate rounds")
+    ap.add_argument("--validate-steps", type=int, default=2,
+                    help="minibatch steps per validation run")
+    ap.add_argument("--validator", default="oracle",
+                    choices=("oracle", "real", "none"))
+    ap.add_argument("--oracle-truth", default="",
+                    help="validator=oracle: JSON dict of ground-truth "
+                         "calibration scalars (default: a seeded "
+                         "heterogeneous-cluster vector)")
+    ap.add_argument("--arch", default="qwen-1.5b",
+                    help="validator=real: arch for the measured runs")
+    ap.add_argument("--workers", type=int, default=0,
+                    help="worker processes for candidate scoring "
+                         "(0 = in-process)")
+    ap.add_argument("--out", default="tune_result.json")
+    ap.add_argument("--seed", type=int, default=0)
+    obs_log.add_log_args(ap)
+    args = ap.parse_args(argv)
+    out = obs_log.from_args("tune", args)
+
+    if args.lengths_file:
+        with open(args.lengths_file) as f:
+            lengths = [int(l) for l in json.load(f)]
+    else:
+        lengths = sample_lengths(args.dataset, args.samples, args.seed,
+                                 max_len=args.max_len).tolist()
+
+    profile = None
+    if args.device_profile != "none":
+        from repro.balance import make_straggler_profile
+        profile = make_straggler_profile(
+            args.device_profile, args.world, slow_factor=args.slow_factor,
+            seed=args.seed, jitter=args.profile_jitter)
+
+    mb_choices = tuple(int(x) for x in args.mb_choices.split(","))
+    k_choices = tuple(int(x) for x in args.staleness_choices.split(","))
+    space = enumerate_space(
+        args.world, mode=args.mode, heterogeneous=profile is not None,
+        mb_choices=mb_choices, staleness_choices=k_choices,
+        max_pipe_stages=args.max_pipe_stages, max_cp=args.max_cp)
+    out.info(f"{len(space)} feasible candidates at world={args.world} "
+             f"mode={args.mode} (profile={args.device_profile})")
+
+    ev = Evaluator(lengths=tuple(lengths), world=args.world,
+                   max_tokens=args.max_tokens, mode=args.mode,
+                   profile=profile, cost_model=DEFAULT_COST_MODEL,
+                   base_cfg=SimConfig(overlap=0.0))
+
+    if args.validator == "oracle":
+        if args.oracle_truth:
+            truth = Calibration.from_hooks(json.loads(args.oracle_truth))
+        else:
+            # a plausible miscalibrated cluster: compute 12% slower than
+            # modeled, wire 35% slower, pushes 20% slower
+            truth = Calibration(time_per_cost=1.12, layer_comm_time=1.35,
+                                weight_push_time=1.2, ring_hop_time=1.15)
+        validator = SimOracleValidator(truth=truth, evaluator=ev,
+                                       steps=args.validate_steps)
+    elif args.validator == "real":
+        validator = RealRunValidator(mode=args.mode, arch=args.arch,
+                                     steps=args.validate_steps)
+    else:
+        validator = None
+
+    t0 = time.time()
+    result = tune(space, ev, validator=validator, topk=args.topk,
+                  max_rounds=args.rounds, workers=args.workers,
+                  log=out.info)
+    dt = time.time() - t0
+    write_tune_result(args.out, result, mode=args.mode, world=args.world,
+                      max_tokens=args.max_tokens)
+    out.always(
+        f"winner: {result.winner.describe()} "
+        f"(makespan {result.winner_makespan:.4f}s over the sketch)\n"
+        f"calibration: {result.calibration.as_dict()}\n"
+        f"rounds: {result.rounds} "
+        f"(ranking {'stable' if result.ranking_stable else 'NOT stable'})\n"
+        f"caches: plans {result.plan_cache['hit_rate']:.0%} hit "
+        f"({result.plan_cache['hits']}/"
+        f"{result.plan_cache['hits'] + result.plan_cache['misses']}), "
+        f"evals {result.eval_cache['hit_rate']:.0%} hit\n"
+        f"searched {result.candidates_total} candidates in {dt:.2f}s "
+        f"-> wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -23,7 +23,12 @@ hook                    evidence                            scalar
 ``ring_hop_time``       comm events named ``*ring*``        real / sim
 ======================  ==================================  ============
 
-A hook with no simulated seconds calibrates to ``None`` (no evidence).
+A hook with no simulated seconds calibrates to ``None`` (no seconds to
+scale); consumers that need a multiplier use
+``DivergenceReport.calibration_or_identity()`` which maps ``None`` to
+1.0.  ``hook_evidence`` keeps the raw per-hook seconds *and event
+counts* of both sides, so a report can distinguish a hook that *never
+fired* from one that *fired at zero cost* (``hook_statuses``).
 Identical traces — the seeded sim-vs-sim golden in ``tests/test_obs.py``
 — produce all-zero deltas and all-1.0 scalars exactly.
 """
@@ -74,21 +79,51 @@ def lane_kind_totals(trace: dict) -> Dict[str, Dict[str, float]]:
     return out
 
 
-def _hook_seconds(trace: dict) -> Dict[str, float]:
-    """Seconds of evidence per cost hook (see :data:`COST_HOOKS`)."""
-    out = {hook: 0.0 for hook in COST_HOOKS}
+def _hook_evidence(trace: dict) -> Dict[str, Dict[str, float]]:
+    """Per-cost-hook evidence: ``{hook: {"seconds": s, "events": n}}``.
+
+    Seconds come from complete (``"ph": "X"``) events only — identical to
+    the historical scalar accounting — while the event count also includes
+    instant (``"ph": "i"``) markers, which is how a *zero-cost* hook firing
+    (e.g. a free weight push marked on the push lane) stays visible: it
+    contributes ``events`` without ``seconds``.  That is the distinction
+    between "hook fired at zero cost" (events > 0, seconds == 0) and
+    "hook never fired" (events == 0)."""
+    out = {hook: {"seconds": 0.0, "events": 0.0} for hook in COST_HOOKS}
     for ev in trace.get("traceEvents", ()):
-        if ev.get("ph") != "X":
+        ph = ev.get("ph")
+        if ph not in ("X", "i"):
             continue
         kind = ev.get("cat", ev.get("args", {}).get("kind", ""))
-        dur = ev.get("dur", 0.0) / 1e6
+        dur = ev.get("dur", 0.0) / 1e6 if ph == "X" else 0.0
         name = ev.get("name", "")
         for hook, (kinds, needle) in COST_HOOKS.items():
             if kind in kinds and (needle is None or needle in name):
-                out[hook] += dur
+                out[hook]["seconds"] += dur
+                out[hook]["events"] += 1.0
     # layer_comm_time prices non-ring comm; ring hops have their own hook
-    out["layer_comm_time"] -= out["ring_hop_time"]
+    out["layer_comm_time"]["seconds"] -= out["ring_hop_time"]["seconds"]
+    out["layer_comm_time"]["events"] -= out["ring_hop_time"]["events"]
     return out
+
+
+def _hook_seconds(trace: dict) -> Dict[str, float]:
+    """Seconds of evidence per cost hook (see :data:`COST_HOOKS`)."""
+    return {hook: ev["seconds"]
+            for hook, ev in _hook_evidence(trace).items()}
+
+
+def hook_status(seconds: float, events: float) -> str:
+    """Classify one side's evidence for a hook: ``"ok"`` (priced seconds),
+    ``"zero-cost"`` (the hook fired but charged nothing), or
+    ``"never-fired"`` (no events at all).  The distinction matters to a
+    calibration consumer: *zero-cost* is real evidence that the hook's
+    price is irrelevant for this config, *never-fired* is no evidence."""
+    if events <= 0.0:
+        return "never-fired"
+    if seconds <= 0.0:
+        return "zero-cost"
+    return "ok"
 
 
 @dataclasses.dataclass
@@ -108,6 +143,29 @@ class DivergenceReport:
     calibration: Dict[str, Optional[float]]
     #: L1 distance between the idle-attribution vectors of matched lanes
     idle_l1: float
+    #: hook -> {real_s, sim_s, real_events, sim_events}: the raw evidence
+    #: the calibration scalars were fit from, so a consumer can tell a
+    #: hook that *never fired* from one that *fired at zero cost*
+    hook_evidence: Dict[str, Dict[str, float]] = dataclasses.field(
+        default_factory=dict)
+
+    def hook_statuses(self, hook: str) -> Tuple[str, str]:
+        """(real, sim) evidence status for one cost hook — each side one
+        of ``"ok"`` / ``"zero-cost"`` / ``"never-fired"`` (see
+        :func:`hook_status`)."""
+        ev = self.hook_evidence.get(hook, {})
+        return (hook_status(ev.get("real_s", 0.0),
+                            ev.get("real_events", 0.0)),
+                hook_status(ev.get("sim_s", 0.0),
+                            ev.get("sim_events", 0.0)))
+
+    def calibration_or_identity(self) -> Dict[str, float]:
+        """The calibration vector with every ``None`` (no sim evidence)
+        replaced by the identity scalar 1.0 — the shape a tuner can feed
+        straight into ``sim.engine.Calibration.from_hooks`` without a
+        zero-division or a spurious 0× price."""
+        return {hook: (1.0 if s is None else s)
+                for hook, s in self.calibration.items()}
 
     @property
     def makespan_error(self) -> float:
@@ -131,11 +189,15 @@ class DivergenceReport:
             lines.append(f"- lanes only in sim: "
                          f"{', '.join(self.sim_only_lanes)}")
         lines += ["", "### Cost-hook calibration (real / sim)", "",
-                  "| hook | scalar |", "|---|---|"]
+                  "| hook | scalar | real | sim |", "|---|---|---|---|"]
         for hook in COST_HOOKS:
             s = self.calibration.get(hook)
-            lines.append(f"| `{hook}` | "
-                         f"{'n/a (no sim evidence)' if s is None else f'{s:.4f}'} |")
+            cell = ('n/a (no sim evidence)' if s is None else f'{s:.4f}')
+            if self.hook_evidence:
+                rs, ss = self.hook_statuses(hook)
+                lines.append(f"| `{hook}` | {cell} | {rs} | {ss} |")
+            else:
+                lines.append(f"| `{hook}` | {cell} |")
         lines += ["", "### Per-kind totals (seconds)", "",
                   "| kind | real | sim | delta |", "|---|---|---|---|"]
         for kind, (r, s, d) in self.kind_totals.items():
@@ -177,12 +239,22 @@ def compare_traces(real: dict, sim: dict) -> DivergenceReport:
         s = sum(t.get(k, 0.0) for t in sim_totals.values())
         kind_totals[k] = (r, s, r - s)
 
-    real_hooks = _hook_seconds(real)
-    sim_hooks = _hook_seconds(sim)
+    real_ev = _hook_evidence(real)
+    sim_ev = _hook_evidence(sim)
     calibration = {}
+    hook_evidence = {}
     for hook in COST_HOOKS:
-        s = sim_hooks[hook]
-        calibration[hook] = (real_hooks[hook] / s) if s > 0.0 else None
+        s = sim_ev[hook]["seconds"]
+        # None strictly means "no sim seconds to scale" — consumers that
+        # need a multiplier use calibration_or_identity() (None -> 1.0);
+        # hook_evidence keeps the never-fired / zero-cost distinction
+        calibration[hook] = (real_ev[hook]["seconds"] / s) if s > 0.0 else None
+        hook_evidence[hook] = {
+            "real_s": real_ev[hook]["seconds"],
+            "sim_s": s,
+            "real_events": real_ev[hook]["events"],
+            "sim_events": sim_ev[hook]["events"],
+        }
 
     real_idle = real.get("otherData", {}).get("idle_attribution", {})
     sim_idle = sim.get("otherData", {}).get("idle_attribution", {})
@@ -202,6 +274,7 @@ def compare_traces(real: dict, sim: dict) -> DivergenceReport:
         sim_only_lanes=[ln for ln in sim_totals if ln not in real_totals],
         calibration=calibration,
         idle_l1=idle_l1,
+        hook_evidence=hook_evidence,
     )
 
 

@@ -1,5 +1,6 @@
 from repro.balance.cost import DeviceProfile, make_straggler_profile  # noqa: F401
 from repro.sim.engine import (  # noqa: F401
+    Calibration,
     CommModel,
     GenModel,
     PosttrainResult,

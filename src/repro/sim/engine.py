@@ -63,6 +63,7 @@ import numpy as np
 from repro.balance.cost import CostModel, DEFAULT_COST_MODEL, DeviceProfile
 from repro.balance.strategies import Plan
 from repro.sim.timeline import (
+    ContextRingPolicy,
     SchedulingPolicy,
     Timeline,
     get_policy,
@@ -83,16 +84,22 @@ def _scheme_backend(scheme: str):
     return get_backend(scheme)
 
 
-def _resolve_policy(backend, policy, *, cp: int = 1,
-                    cm=None) -> SchedulingPolicy:
+def _resolve_policy(backend, policy, *, cp: int = 1, cm=None,
+                    cal: "Optional[Calibration]" = None) -> SchedulingPolicy:
     """The backend's registered policy unless the caller composes another
     one over the same cost model (e.g. pipelined 'hier').  A cp plan
     (cp > 1) on a ring-capable backend specializes the policy with the
-    ring-hop cost (``CpRingBackend.ring_policy``)."""
+    ring-hop cost (``CpRingBackend.ring_policy``), scaled by the
+    calibration's ``ring_hop_time`` when one is set (identity calibration
+    reuses the backend's policy object untouched — bit-exact)."""
     if policy is not None:
         return get_policy(policy)
     if cp > 1 and hasattr(backend, "ring_policy"):
-        return backend.ring_policy(cm, cp)
+        pol = backend.ring_policy(cm, cp)
+        if (cal is not None and cal.ring_hop_time != 1.0
+                and isinstance(pol, ContextRingPolicy)):
+            pol = ContextRingPolicy(pol.cp, pol.hop_s * cal.ring_hop_time)
+        return pol
     return backend.policy
 
 
@@ -134,12 +141,63 @@ class CommModel:
 
 
 @dataclasses.dataclass(frozen=True)
+class Calibration:
+    """Per-cost-hook scalars correcting the simulator against measurement.
+
+    One multiplier per simulator cost hook — the vocabulary
+    ``obs.divergence.COST_HOOKS`` fits from a real-vs-sim trace pair:
+
+      ``time_per_cost``     scales every compute second
+      ``layer_comm_time``   scales the per-layer exposed wire time
+      ``weight_push_time``  scales the trainer→generator weight push
+      ``ring_hop_time``     scales the cp KV-ring hop
+
+    The identity vector (all 1.0, the default) is a guaranteed bit-exact
+    no-op: every application site guards with ``!= 1.0`` and skips the
+    multiplication entirely, so a calibrated ``SimConfig`` with identity
+    scalars reproduces the uncalibrated floats literally (golden-tested
+    against every ``BENCH_*.json``).
+    """
+
+    time_per_cost: float = 1.0
+    layer_comm_time: float = 1.0
+    weight_push_time: float = 1.0
+    ring_hop_time: float = 1.0
+
+    @classmethod
+    def from_hooks(cls, hooks: Optional[Dict[str, Optional[float]]]
+                   ) -> "Calibration":
+        """Build from a ``{hook: scalar-or-None}`` mapping — the shape
+        ``obs.divergence`` emits.  ``None`` (no evidence) and missing
+        hooks mean *identity*, 1.0 — never zero."""
+        hooks = hooks or {}
+        kw = {}
+        for f in dataclasses.fields(cls):
+            v = hooks.get(f.name)
+            kw[f.name] = 1.0 if v is None else float(v)
+        return cls(**kw)
+
+    def as_dict(self) -> Dict[str, float]:
+        return dataclasses.asdict(self)
+
+    def is_identity(self) -> bool:
+        return all(v == 1.0 for v in dataclasses.astuple(self))
+
+
+@dataclasses.dataclass(frozen=True)
 class SimConfig:
     num_layers: int = 24
     cost_model: CostModel = DEFAULT_COST_MODEL
     comm: CommModel = CommModel()
     time_per_cost: float = 1e-6  # seconds per cost-model unit per layer
     overlap: float = 1.0  # fraction of comm hidden under compute (§6.1)
+    #: measured-vs-sim correction scalars (None = identity); identity is a
+    #: bit-exact no-op by construction (see Calibration)
+    calibration: Optional[Calibration] = None
+    #: False: score-only mode — lane cursors and kind totals stay exact,
+    #: event records are skipped (the auto-tuner's fast path; traces need
+    #: the default True)
+    record_events: bool = True
 
 
 @dataclasses.dataclass
@@ -239,7 +297,12 @@ def _step_times_and_wire(plan: Plan, seqlens: Sequence[int],
     if comp_mult is not None:
         times = [[t * comp_mult[d] for t in ts]
                  for d, ts in enumerate(times)]
+    cal = cfg.calibration
+    if cal is not None and cal.time_per_cost != 1.0:
+        times = [[t * cal.time_per_cost for t in ts] for ts in times]
     comm_l = backend.layer_comm_time(cfg.comm, D) * (1.0 - cfg.overlap)
+    if cal is not None and cal.layer_comm_time != 1.0:
+        comm_l = comm_l * cal.layer_comm_time
     cl = ([comm_l * m for m in comm_mult] if comm_mult is not None
           else [comm_l] * D)
     return times, cl
@@ -302,14 +365,16 @@ def simulate_minibatch(plan: Plan, seqlens: Sequence[int], *,
             "the plan) are set — the slowdown would be applied twice; "
             "fold the speeds into the profile instead")
     backend = _scheme_backend(scheme)
-    pol = _resolve_policy(backend, policy, cp=plan.cp, cm=cfg.comm)
+    pol = _resolve_policy(backend, policy, cp=plan.cp, cm=cfg.comm,
+                          cal=cfg.calibration)
     times, cl = _step_times_and_wire(plan, seqlens, cfg, backend,
                                      device_speed, profile, step)
     L = cfg.num_layers
 
     tl = Timeline(source="sim", meta={"model": "minibatch",
                                       "scheme": backend.name,
-                                      "policy": pol.name})
+                                      "policy": pol.name},
+                  record=cfg.record_events)
     makespan, finish = schedule_minibatch(tl, pol, times, cl, L)
     tl.count("comm wire bytes", makespan,
              L * _layer_wire_bytes(backend, cfg.comm, D))
@@ -381,11 +446,13 @@ def simulate_training(steps, *, scheme: str, cfg: SimConfig = SimConfig(),
             "fold the speeds into the profile instead")
 
     backend = _scheme_backend(scheme)
-    pol = _resolve_policy(backend, policy, cp=steps[0][0].cp, cm=cfg.comm)
+    pol = _resolve_policy(backend, policy, cp=steps[0][0].cp, cm=cfg.comm,
+                          cal=cfg.calibration)
     L = cfg.num_layers
     tl = timeline if timeline is not None else Timeline(
         source="sim", meta={"model": "training", "scheme": backend.name,
-                            "policy": pol.name, "staleness": staleness})
+                            "policy": pol.name, "staleness": staleness},
+        record=cfg.record_events)
 
     step_wire = L * _layer_wire_bytes(backend, cfg.comm, D)
     if pol.name == "lockstep" or staleness <= 0:
@@ -545,6 +612,11 @@ def simulate_posttrain(steps, *, scheme: str = "async", comm: str = "odc",
     backend = _scheme_backend(comm)
     layers = cfg.num_layers if gen.push_layers is None else gen.push_layers
     push = backend.weight_push_time(cfg.comm, D, layers)
+    cal = cfg.calibration
+    if cal is not None and cal.weight_push_time != 1.0:
+        push = push * cal.weight_push_time
+    pol = _resolve_policy(backend, None, cp=steps[0][0].cp, cm=cfg.comm,
+                          cal=cal)
     slots = gen.slots if gen.slots > 0 else D
     if gen.slot_speeds and len(gen.slot_speeds) != slots:
         raise ValueError(
@@ -554,7 +626,8 @@ def simulate_posttrain(steps, *, scheme: str = "async", comm: str = "odc",
     tl = Timeline(source="sim",
                   meta={"model": "posttrain", "scheme": scheme,
                         "comm": backend.name, "staleness": K,
-                        "push_overlap": gen.push_overlap})
+                        "push_overlap": gen.push_overlap},
+                  record=cfg.record_events)
     slot_lanes = [tl.lane(f"slot{i}") for i in range(slots)]
     trainer = tl.lane("trainer")
 
@@ -579,6 +652,11 @@ def simulate_posttrain(steps, *, scheme: str = "async", comm: str = "odc",
         if v > 0 and push > 0:
             tl.lane("push").place(train_finish[v - 1], push, "push",
                                   f"weights v{v} -> wave {t}")
+        elif v > 0:
+            # the push hook fired at zero cost (push_layers=0 or a
+            # zero-cost backend) — mark the instant so a divergence fit
+            # can tell "fired for free" from "never fired"
+            tl.lane("push").mark("push", f"weights v{v} -> wave {t} (free)")
         arrival = landed
         spacing = gen.arrival_spacing if scheme == "continuous" else 0.0
         for r, length in enumerate(lens):
@@ -620,7 +698,7 @@ def simulate_posttrain(steps, *, scheme: str = "async", comm: str = "odc",
         # its per-device timeline; the trainer lane keeps the step opaque
         times, cl = _step_times_and_wire(plan, lens, cfg, backend, None,
                                          profile, t)
-        tm, _ = backend.policy.step_blocks(times, cl, cfg.num_layers)
+        tm, _ = pol.step_blocks(times, cl, cfg.num_layers)
         trainer.advance(tm, "compute", f"train step {t}")
         train_start.append(start)
         train_finish.append(trainer.t)
@@ -705,6 +783,9 @@ def simulate_serve(requests, *, scheme: str, slots: int, comm: str = "odc",
     layers = cfg.num_layers if push_layers is None else push_layers
     push = (backend.weight_push_time(cfg.comm, slots, layers)
             if pushes > 0 and push_every > 0 else 0.0)
+    cal = cfg.calibration
+    if cal is not None and cal.weight_push_time != 1.0:
+        push = push * cal.weight_push_time
     push_t = [k * push_every for k in range(1, pushes + 1)] if push else []
     barrier = backend.push_blocks_trainer
     overlap = gen.push_overlap
@@ -713,7 +794,8 @@ def simulate_serve(requests, *, scheme: str, slots: int, comm: str = "odc",
     tl = Timeline(source="sim",
                   meta={"model": "serve", "scheme": scheme,
                         "comm": backend.name, "slots": slots,
-                        "push_overlap": overlap})
+                        "push_overlap": overlap},
+                  record=cfg.record_events)
     lanes = [tl.lane(f"slot{i}") for i in range(slots)]
     order = sorted(range(len(requests)),
                    key=lambda i: (requests[i][0], i))

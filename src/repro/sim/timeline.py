@@ -79,13 +79,28 @@ class Lane:
     stay monotone per lane (derived sub-event offsets can drift from the
     cursor by ulps), durations are stored exactly as given so per-kind
     sums — busy conservation, idle attribution — stay exact.
+
+    Per-kind duration totals are accumulated *at placement* (``_totals``),
+    so ``kind_totals`` is an O(1) read instead of a re-scan of the event
+    list — placing and accounting N events is O(N) total.  The running
+    sums add durations in exactly the emission order the retired
+    re-scan summed them in, so they are bit-identical to it.
+
+    ``record=False`` keeps the cursor arithmetic and the running totals
+    but skips materializing ``Event`` records entirely — the mode the
+    auto-tuner scores thousands of candidate timelines in, where the
+    event list would be allocated only to be thrown away.  Makespan,
+    finish times, ``kind_totals`` and the idle attribution are identical
+    in both modes; only trace export needs ``record=True``.
     """
 
-    def __init__(self, name: str):
+    def __init__(self, name: str, record: bool = True):
         self.name = name
         self.t = 0.0
+        self.record = record
         self.events: List[Event] = []
         self._edge = 0.0  # last event start, for monotone placement
+        self._totals = {k: 0.0 for k in EVENT_KINDS}
 
     def _emit(self, start: float, duration: float, kind: str, name: str):
         if duration <= 0.0:
@@ -93,6 +108,9 @@ class Lane:
         if kind not in EVENT_KINDS:
             raise ValueError(f"unknown event kind {kind!r}; "
                              f"one of {EVENT_KINDS}")
+        self._totals[kind] += duration
+        if not self.record:
+            return
         start = max(start, self._edge)
         self._edge = start
         self.events.append(Event(kind, start, duration, name))
@@ -109,6 +127,8 @@ class Lane:
         if kind not in EVENT_KINDS:
             raise ValueError(f"unknown event kind {kind!r}; "
                              f"one of {EVENT_KINDS}")
+        if not self.record:
+            return
         start = self.t if at is None else at
         start = max(start, self._edge)
         self._edge = start
@@ -151,10 +171,10 @@ class Lane:
         self.t = max(self.t, start + max(duration, 0.0))
 
     def kind_totals(self) -> Dict[str, float]:
-        out = {k: 0.0 for k in EVENT_KINDS}
-        for ev in self.events:
-            out[ev.kind] += ev.duration
-        return out
+        """Per-kind duration sums, read off the running totals kept at
+        placement time (bit-identical to re-summing ``self.events`` —
+        same additions in the same order — without the re-scan)."""
+        return dict(self._totals)
 
 
 class Timeline:
@@ -163,25 +183,34 @@ class Timeline:
     ``source`` is "sim" for simulated runs and "real" for wall-clock
     recordings (``repro.sim.trace.TraceRecorder``) — both serialize to the
     same Chrome-trace schema, so they render in one viewer.
+
+    ``record=False`` propagates to every lane (see :class:`Lane`): cursors
+    and per-kind totals stay exact, event records are skipped — the cheap
+    mode for score-only simulations that never export a trace.
     """
 
-    def __init__(self, source: str = "sim", meta: Optional[dict] = None):
+    def __init__(self, source: str = "sim", meta: Optional[dict] = None,
+                 record: bool = True):
         self.source = source
         self.meta = dict(meta or {})
+        self.record = record
         self._lanes: Dict[str, Lane] = {}
         self._counters: Dict[str, List[Tuple[float, float]]] = {}
 
     def lane(self, name: str) -> Lane:
         ln = self._lanes.get(name)
         if ln is None:
-            ln = self._lanes[name] = Lane(name)
+            ln = self._lanes[name] = Lane(name, record=self.record)
         return ln
 
     def count(self, track: str, t: float, value: float):
         """Sample a counter track (cumulative wire bytes, queue depth,
         staleness) at time ``t`` — rendered as a ``"ph": "C"`` graph
         under the lanes in the Chrome-trace export.  Annotation-only:
-        samples never feed back into lane cursor arithmetic."""
+        samples never feed back into lane cursor arithmetic (and are
+        skipped entirely in ``record=False`` score-only mode)."""
+        if not self.record:
+            return
         self._counters.setdefault(track, []).append((float(t), float(value)))
 
     @property
@@ -443,9 +472,19 @@ class PipelineStagePolicy(SchedulingPolicy):
     lanes share the step makespan as their block duration (the
     minibatch-end optimizer barrier joins every stage), so drain time is
     attributed explicitly.
+
+    ``interleave=True`` issues the interleaved 1F1B order (halved warmup
+    depth — ``instructions_1f1b(..., interleave=True)``, the same stream
+    the executable ``--pipe-interleave`` gradient loop runs).  The shared
+    registry instance ``PIPE_1F1B`` keeps the default (non-interleaved)
+    order; callers wanting the variant construct their own instance, as
+    the auto-tuner's pipe-interleave axis does.
     """
 
     name = "1f1b"
+
+    def __init__(self, interleave: bool = False):
+        self.interleave = bool(interleave)
 
     def step_blocks(self, times, cl, L):
         S = len(times)
@@ -455,7 +494,9 @@ class PipelineStagePolicy(SchedulingPolicy):
         M = len(stream)
         denom = max(L, 1)
         share = [c / denom for c in stage_partition(denom, S)]
-        orders = [instructions_1f1b(M, S, stage=s) for s in range(S)]
+        orders = [instructions_1f1b(M, S, stage=s,
+                                    interleave=self.interleave)
+                  for s in range(S)]
 
         # completion (incl. the boundary send) of F/B for mb j at stage s
         f_done = [[None] * M for _ in range(S)]

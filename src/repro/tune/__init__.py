@@ -1,0 +1,28 @@
+"""Calibrated simulator-driven auto-tuner.
+
+``enumerate_space`` spans the feasible config space ({backend × strategy
+× mesh shape × minibatch plan size × staleness K × push overlap × pipe
+stages/interleave × cp degree}), ``tune`` scores it with the timeline
+engine under a calibration vector, prunes with successive halving,
+validates the survivors against short *real* runs (or a seeded sim
+oracle), re-fits the calibration from the real-vs-sim divergence, and
+iterates until the ranking is stable.  ``python -m repro.launch.tune``
+is the CLI; ``launch.train`` / ``launch.posttrain`` consume the emitted
+``tune_result.json`` via ``--config``.
+"""
+from repro.tune.config import (  # noqa: F401
+    TUNE_RESULT_SCHEMA,
+    load_tune_defaults,
+    read_tune_result,
+    write_tune_result,
+)
+from repro.tune.space import Candidate, enumerate_space  # noqa: F401
+from repro.tune.tuner import (  # noqa: F401
+    Evaluator,
+    RealRunValidator,
+    SimOracleValidator,
+    TuneResult,
+    fit_calibration,
+    successive_halving,
+    tune,
+)

@@ -1,0 +1,127 @@
+"""``tune_result.json``: the tuner's launch-config artifact.
+
+Schema ``repro.tune_result/v1``::
+
+    {
+      "schema": "repro.tune_result/v1",
+      "mode": "train" | "posttrain",
+      "world": 8,
+      "max_tokens": 512,
+      "winner": { ...Candidate fields... },
+      "winner_makespan_s": 1.23,
+      "calibration": {"time_per_cost": 1.0, ...},
+      "leaderboard": [{"candidate": {...}, "makespan_s": ...}, ...],
+      "rounds": 2, "ranking_stable": true,
+      "candidates_total": 240,
+      "plan_cache": {"hits": ..., "misses": ..., "hit_rate": ...},
+      "eval_cache": {...},
+      "ranking_history": [[...], ...]
+    }
+
+``load_tune_defaults`` maps the winner back onto the argparse dests of
+``launch.train`` / ``launch.posttrain`` so either driver can launch it
+via ``--config tune_result.json`` (explicit CLI flags still win — the
+drivers apply the file with ``set_defaults`` before the final parse).
+"""
+from __future__ import annotations
+
+import json
+from typing import Optional
+
+from repro.sim.engine import Calibration
+from repro.tune.space import Candidate
+
+TUNE_RESULT_SCHEMA = "repro.tune_result/v1"
+
+
+def write_tune_result(path: str, result, *, mode: str, world: int,
+                      max_tokens: int) -> str:
+    """Serialize a :class:`~repro.tune.tuner.TuneResult` to ``path``."""
+    doc = {
+        "schema": TUNE_RESULT_SCHEMA,
+        "mode": mode,
+        "world": world,
+        "max_tokens": max_tokens,
+        "winner": result.winner.to_dict(),
+        "winner_makespan_s": result.winner_makespan,
+        "calibration": result.calibration.as_dict(),
+        "leaderboard": [{"candidate": c.to_dict(), "makespan_s": mk}
+                        for c, mk in result.leaderboard],
+        "rounds": result.rounds,
+        "ranking_stable": result.ranking_stable,
+        "candidates_total": result.candidates_total,
+        "plan_cache": result.plan_cache,
+        "eval_cache": result.eval_cache,
+        "ranking_history": result.ranking_history,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def read_tune_result(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    schema = doc.get("schema", "")
+    if schema != TUNE_RESULT_SCHEMA:
+        raise ValueError(f"{path}: unknown tune-result schema {schema!r} "
+                         f"(expected {TUNE_RESULT_SCHEMA})")
+    return doc
+
+
+def winner_candidate(doc: dict) -> Candidate:
+    return Candidate.from_dict(doc["winner"])
+
+
+def winner_calibration(doc: dict) -> Calibration:
+    return Calibration.from_hooks(doc.get("calibration"))
+
+
+def load_tune_defaults(path: str, mode: str) -> dict:
+    """Argparse defaults for ``launch.train`` / ``launch.posttrain`` from
+    a tune-result file — only dests the respective driver defines.
+
+    The file's mode must match the consuming driver (a posttrain winner's
+    staleness knob means nothing to the SFT driver and vice versa)."""
+    doc = read_tune_result(path)
+    if doc.get("mode") != mode:
+        raise ValueError(
+            f"{path}: tuned for mode {doc.get('mode')!r}, but this driver "
+            f"runs {mode!r} — re-tune with --mode {mode}")
+    w = winner_candidate(doc)
+    defaults = {
+        "comm": w.backend,
+        "strategy": w.strategy,
+        "minibatch_per_device": w.mb_per_device,
+        "max_tokens": int(doc["max_tokens"]),
+    }
+    if w.nodes > 1:
+        defaults["nodes"] = w.nodes
+    if w.pipe_stages:
+        defaults["pipe_stages"] = w.pipe_stages
+    if mode == "train":
+        if w.pipe_interleave:
+            defaults["pipe_interleave"] = True
+        if w.cp > 1:
+            defaults["cp"] = w.cp
+    else:
+        defaults["staleness"] = w.staleness
+    return defaults
+
+
+def apply_config_arg(ap, argv, *, mode: str,
+                     dest: str = "config") -> Optional[dict]:
+    """Two-phase ``--config`` ingestion for a driver's argparse: peek at
+    the flag with ``parse_known_args``, fold the file's winner in via
+    ``set_defaults`` (so explicit CLI flags still override), and return
+    the loaded document (None without ``--config``).  The caller re-runs
+    ``parse_args`` afterwards."""
+    peek, _ = ap.parse_known_args(argv)
+    path = getattr(peek, dest, "")
+    if not path:
+        return None
+    defaults = load_tune_defaults(path, mode)
+    known = {a.dest for a in ap._actions}
+    ap.set_defaults(**{k: v for k, v in defaults.items() if k in known})
+    return read_tune_result(path)

@@ -1,0 +1,148 @@
+"""The auto-tuner's candidate vocabulary and feasible-space enumeration.
+
+A :class:`Candidate` is one fully-specified launch config: comm backend,
+balancing strategy, mesh shape (hier node count / pipe stage count / cp
+degree), minibatch plan size, staleness bound, and the posttrain push
+knob.  ``enumerate_space`` walks the cross product and keeps only the
+feasible cells — the same compatibility rules the drivers enforce:
+
+  * 'collective' schedules lockstep, so it only takes uniform-
+    microbatch-count strategies (local_sort, lb_micro) and staleness 0
+    (a per-layer barrier leaves nothing to run stale);
+  * ragged strategies (lb_mini, lb_mini_het) need a p2p backend;
+  * lb_mini_het is offered only when a heterogeneous profile is given
+    (it degenerates to lb_mini otherwise — a wasted duplicate cell);
+  * 'hier' needs a node count that divides the world with ≥2 devices
+    per node; 'pipe'/'pipe-int8' a stage count that divides the world;
+    'cp' a ring degree that divides the world, paired with lb_token
+    (the only strategy that sequence-shards over the ring);
+  * pipe interleave is a scheduling-policy variant of the training
+    path (``PipelineStagePolicy(interleave=True)``) — posttrain mode
+    schedules the trainer step through the backend's registered policy,
+    so interleave candidates are train-mode only;
+  * staleness K > 0 is posttrain-only: ``launch.posttrain --staleness``
+    implements the SSP bound, but ``launch.train`` has no async loop —
+    a K > 0 train candidate could win the sim yet not be launchable
+    from its own ``tune_result.json``;
+  * push overlap only exists in posttrain mode, and only p2p backends
+    can hide the push ('collective' stalls at its push barrier
+    regardless).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+FLAT_BACKENDS = ("collective", "odc", "odc-overlap")
+UNIFORM_STRATEGIES = ("local_sort", "lb_micro")
+RAGGED_STRATEGIES = ("local_sort", "lb_micro", "lb_mini")
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One point of the tuner's search space (hashable; the eval-cache
+    key and the ``tune_result.json`` winner schema both derive from it)."""
+
+    backend: str
+    strategy: str
+    mb_per_device: int
+    staleness: int = 0
+    nodes: int = 1          # hier only: node count of the two-tier mesh
+    pipe_stages: int = 0    # pipe/pipe-int8 only: stage count
+    pipe_interleave: bool = False
+    cp: int = 1             # cp only: ring degree
+    push_overlap: bool = False  # posttrain only
+
+    @property
+    def key(self) -> Tuple:
+        return dataclasses.astuple(self)
+
+    def describe(self) -> str:
+        bits = [self.backend, self.strategy, f"mb{self.mb_per_device}"]
+        if self.staleness:
+            bits.append(f"K{self.staleness}")
+        if self.nodes > 1:
+            bits.append(f"nodes{self.nodes}")
+        if self.pipe_stages:
+            bits.append(f"stages{self.pipe_stages}"
+                        + ("i" if self.pipe_interleave else ""))
+        if self.cp > 1:
+            bits.append(f"cp{self.cp}")
+        if self.push_overlap:
+            bits.append("pushov")
+        return "/".join(bits)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Candidate":
+        names = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in names})
+
+
+def _divisors_ge2(n: int, cap: int) -> List[int]:
+    return [d for d in range(2, min(n, cap) + 1) if n % d == 0]
+
+
+def enumerate_space(world: int, *, mode: str = "train",
+                    heterogeneous: bool = False,
+                    mb_choices: Sequence[int] = (2, 4),
+                    staleness_choices: Sequence[int] = (0, 1, 2),
+                    max_pipe_stages: Optional[int] = None,
+                    max_cp: Optional[int] = None) -> List[Candidate]:
+    """All feasible candidates for a ``world``-device job.
+
+    mode: 'train' (SFT stream, ``simulate_training`` semantics) or
+    'posttrain' (rollout→train pipeline, ``simulate_posttrain``).
+    heterogeneous: offer lb_mini_het alongside lb_mini.
+    max_pipe_stages / max_cp: 0 disables the axis entirely; None means
+    any divisor of the world.
+    """
+    if mode not in ("train", "posttrain"):
+        raise ValueError(f"unknown tune mode {mode!r}")
+    ragged = RAGGED_STRATEGIES + (("lb_mini_het",) if heterogeneous else ())
+    stalenesses = ([0] if mode == "train"
+                   else [k for k in staleness_choices if k >= 0])
+    pushes = (False, True) if mode == "posttrain" else (False,)
+    out: List[Candidate] = []
+
+    def add(**kw):
+        for mb in mb_choices:
+            for push in pushes:
+                if push and kw["backend"] == "collective":
+                    continue  # the push barrier cannot be hidden
+                out.append(Candidate(mb_per_device=mb, push_overlap=push,
+                                     **kw))
+
+    for backend in FLAT_BACKENDS:
+        if backend == "collective":
+            for strat in UNIFORM_STRATEGIES:
+                add(backend=backend, strategy=strat, staleness=0)
+            continue
+        for strat in ragged:
+            for k in stalenesses:
+                add(backend=backend, strategy=strat, staleness=k)
+
+    for nodes in _divisors_ge2(world, world // 2):
+        # nodes divides world with ≥2 devices per node (nodes ≤ world/2)
+        for strat in ragged:
+            for k in stalenesses:
+                add(backend="hier", strategy=strat, staleness=k, nodes=nodes)
+
+    stage_cap = world // 2 if max_pipe_stages is None else max_pipe_stages
+    for stages in _divisors_ge2(world, stage_cap):
+        for backend in ("pipe", "pipe-int8"):
+            interleaves = (False, True) if mode == "train" else (False,)
+            for il in interleaves:
+                for strat in ragged:
+                    for k in stalenesses:
+                        add(backend=backend, strategy=strat, staleness=k,
+                            pipe_stages=stages, pipe_interleave=il)
+
+    cp_cap = world // 2 if max_cp is None else max_cp
+    for cp in _divisors_ge2(world, cp_cap):
+        for k in stalenesses:
+            add(backend="cp", strategy="lb_token", staleness=k, cp=cp)
+
+    return out

